@@ -1,0 +1,54 @@
+"""Kernel microbench: the pure-JAX reference paths (what actually executes on
+CPU) timed across sizes, plus one interpret-mode validation per Pallas kernel
+(interpret=True timings are NOT hardware-meaningful — correctness only)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, timeit
+from repro.kernels import ops, ref
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    csv = Csv("kernel,config,ref_us_per_call,pallas_interpret_ok")
+
+    # tile_count: one pyramid-level circle count
+    for s, tile, c in ((256, 16, 1), (1024, 16, 4)):
+        level = jnp.asarray(rng.integers(0, 4, size=(s, s, c)), jnp.int32)
+        q = jnp.asarray(rng.uniform(0, s, size=(64, 2)), jnp.float32)
+        r = jnp.asarray(rng.uniform(1, tile / 2 - 1.5, size=(64,)), jnp.float32)
+        t = timeit(lambda: ref.tile_count(level, q, r, 1, tile), repeats=5)
+        ok = bool(np.array_equal(
+            np.asarray(ops.tile_count(level, q, r, 1, tile, interpret=True)),
+            np.asarray(ref.tile_count(level, q, r, 1, tile)),
+        ))
+        csv.row("tile_count", f"S={s} T={tile} C={c} B=64", f"{t*1e6/64:.1f}", ok)
+
+    # candidate_topk: post-gather re-rank
+    for b, c, d, k in ((64, 256, 64, 16), (256, 1024, 128, 16)):
+        cand = jnp.asarray(rng.normal(size=(b, c, d)), jnp.float32)
+        valid = jnp.asarray(rng.uniform(size=(b, c)) > 0.2)
+        q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+        t = timeit(lambda: ref.candidate_topk(cand, valid, q, k), repeats=5)
+        gd, _ = ops.candidate_topk(cand[:4], valid[:4], q[:4], k, interpret=True)
+        wd, _ = ref.candidate_topk(cand[:4], valid[:4], q[:4], k)
+        ok = bool(np.allclose(np.asarray(gd), np.asarray(wd), atol=1e-4))
+        csv.row("candidate_topk", f"B={b} C={c} d={d} k={k}", f"{t*1e6/b:.1f}", ok)
+
+    # brute_knn: the paper's baseline
+    for b, n, d, k in ((100, 10_000, 2, 11), (100, 100_000, 2, 11)):
+        q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        t = timeit(lambda: ref.brute_knn(q, x, k), repeats=3)
+        gd, _ = ops.brute_knn(q[:4], x[:2048], k, interpret=True)
+        wd, _ = ref.brute_knn(q[:4], x[:2048], k)
+        ok = bool(np.allclose(np.asarray(gd), np.asarray(wd), atol=1e-4))
+        csv.row("brute_knn", f"B={b} N={n} d={d} k={k}", f"{t*1e6/b:.1f}", ok)
+    return csv
+
+
+if __name__ == "__main__":
+    main()

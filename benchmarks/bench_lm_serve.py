@@ -1,0 +1,49 @@
+"""LM-side integration benchmark: serving throughput with and without the
+active-search kNN-LM head (smoke-scale model on CPU — the datastore search
+cost is the quantity of interest; the LM is constant between the two rows)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Csv
+from repro.configs import get_smoke
+from repro.core import knn_lm
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import Engine, ServeConfig, build_datastore_from_model
+from repro.models import model as M
+
+
+def main(datastore_sizes=(4096, 65_536)) -> None:
+    cfg = get_smoke("internlm2-1.8b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    mesh = make_host_mesh(1, 1)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, size=(8, 32), dtype=np.int32)
+    csv = Csv("mode,datastore_n,decode_tok_per_s")
+
+    engine = Engine(cfg, params, mesh, ServeConfig(max_new_tokens=16))
+    engine.generate(prompts)  # warm
+    engine.stats = {"prefill_s": 0, "decode_s": 0, "tokens": 0}
+    engine.generate(prompts)
+    csv.row("lm_only", 0, f"{engine.stats['tokens']/engine.stats['decode_s']:.1f}")
+
+    knn_cfg = knn_lm.KNNLMConfig(k=8)
+    for n in datastore_sizes:
+        corpus = rng.integers(0, cfg.vocab_size, size=(n // 64, 65), dtype=np.int32)
+        store = build_datastore_from_model(cfg, params, corpus, knn_cfg)
+        eng = Engine(cfg, params, mesh, ServeConfig(max_new_tokens=16, knn=knn_cfg),
+                     datastore=store)
+        eng.generate(prompts)  # warm
+        eng.stats = {"prefill_s": 0, "decode_s": 0, "tokens": 0}
+        eng.generate(prompts)
+        csv.row("knn_lm_active_search", store.n_points,
+                f"{eng.stats['tokens']/eng.stats['decode_s']:.1f}")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

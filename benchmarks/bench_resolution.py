@@ -1,0 +1,40 @@
+"""Paper §2 resolution trade-off: accuracy and query time vs grid_size.
+'If the resolution increases, the algorithm requires a bigger memory size and
+has to check more pixels' — we measure both directions."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import Csv, paper_data, timeit
+from repro.core import active_search as act, exact
+from repro.core.grid import GridConfig, build_index
+from repro.core.projection import identity_projection
+
+K, N = 11, 20_000
+
+
+def main(grids=(128, 256, 512, 1024, 2048)) -> None:
+    rng = np.random.default_rng(0)
+    pts, labels = paper_data(rng, N)
+    q, _ = paper_data(rng, 100)
+    truth = exact.classify(q, pts, labels, K, 3)
+    csv = Csv("grid_size,accuracy,query_s,index_mib")
+
+    for g in grids:
+        cfg = GridConfig(grid_size=g, tile=16, n_classes=3, window=64,
+                         row_cap=64, r0=max(g // 30, 2), k_slack=2.0)
+        idx = build_index(pts, cfg, identity_projection(pts), labels=labels)
+        pred = act.classify(idx, cfg, q, K)
+        acc = float(np.mean(np.asarray(pred) == np.asarray(truth)))
+        t = timeit(lambda: act.classify(idx, cfg, q, K), repeats=3)
+        mib = sum(a.size * a.dtype.itemsize for a in
+                  [idx.offsets, *idx.pyramid]) / 2**20
+        csv.row(g, f"{acc:.3f}", f"{t:.4f}", f"{mib:.1f}")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Roofline table reader: renders §Roofline of EXPERIMENTS.md from the
+dry-run artifact (runs/dryrun_single.jsonl).  No compilation here — run
+`python -m repro.launch.dryrun --all --mesh single --out runs/dryrun_single.jsonl`
+first (hours of XLA compiles)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Csv
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "runs", "dryrun_single_v3.jsonl")
+
+
+def load(path: str = DEFAULT) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r.get("mesh"))] = r  # last wins
+    return list(recs.values())
+
+
+def main(path: str = DEFAULT) -> None:
+    recs = load(path)
+    csv = Csv("arch,shape,status,compute_s,memory_s,collective_s,bottleneck,"
+              "model_flops_ratio,temp_gib,mem_upper_s")
+    if not recs:
+        csv.row("(no dry-run artifact found — run repro.launch.dryrun first)",
+                "", "", "", "", "", "", "", "")
+        return csv
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("status") != "OK":
+            csv.row(r["arch"], r["shape"], r.get("status", "?"),
+                    "", "", "", "", "", "", "")
+            continue
+        roof = r["roofline"]
+        mem = (r.get("memory") or {}).get("temp_size_in_bytes", 0) / 2**30
+        csv.row(
+            r["arch"], r["shape"], "OK",
+            f"{roof['compute_s']:.3f}", f"{roof['memory_s']:.3f}",
+            f"{roof['collective_s']:.3f}", roof["bottleneck"],
+            f"{(r.get('model_flops_ratio') or 0):.3f}", f"{mem:.2f}",
+            f"{roof.get('memory_upper_s', roof['memory_s']):.3f}",
+        )
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Fig. 3: elapsed time vs N — original kNN grows with N, active search
+is ~independent of N (the paper's headline claim).
+
+100 query points, k=11, 3 classes.  Grid fixed while N varies, exactly as the
+paper fixes its 3000x3000 image.  (grid_size is CPU-scaled; the 3000-image
+setting runs in bench_accuracy.py.)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Csv, paper_data, timeit
+from repro.core import active_search as act, exact
+from repro.core.grid import GridConfig, build_index
+from repro.core.projection import identity_projection
+
+K = 11
+N_QUERIES = 100
+
+
+def main(grid_size: int = 1024, ns=(1_000, 4_000, 16_000, 64_000, 256_000)) -> None:
+    rng = np.random.default_rng(0)
+    csv = Csv("n,exact_knn_s,active_search_s,active_build_s,speedup")
+    cfg = GridConfig(grid_size=grid_size, tile=16, n_classes=3, window=64,
+                     row_cap=64, r0=100, k_slack=2.0)
+    q, _ = paper_data(rng, N_QUERIES)
+
+    for n in ns:
+        pts, labels = paper_data(rng, n)
+        proj = identity_projection(pts)
+        t_build = timeit(
+            lambda: build_index(pts, cfg, proj, labels=labels), repeats=3, warmup=1
+        )
+        idx = build_index(pts, cfg, proj, labels=labels)
+        t_exact = timeit(lambda: exact.classify(q, pts, labels, K, 3), repeats=3)
+        t_act = timeit(lambda: act.classify(idx, cfg, q, K), repeats=3)
+        csv.row(n, f"{t_exact:.4f}", f"{t_act:.4f}", f"{t_build:.4f}",
+                f"{t_exact / t_act:.2f}")
+
+    # derived: paper claims active-search time ~independent of N
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark utilities: wall-clock timing with warmup + synthetic data."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def paper_data(rng, n: int, n_classes: int = 3, d: int = 2):
+    """'Randomly generated 2 dimensional data points' (paper §3)."""
+    pts = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, n_classes, size=n), jnp.int32)
+    return pts, labels
+
+
+class Csv:
+    def __init__(self, header: str):
+        self.rows = [header]
+        print(header, flush=True)
+
+    def row(self, *vals):
+        line = ",".join(str(v) for v in vals)
+        self.rows.append(line)
+        print(line, flush=True)

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure + system benches.
+
+  python -m benchmarks.run              # everything
+  python -m benchmarks.run --only time_vs_n accuracy
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+BENCHES = [
+    ("time_vs_n", "paper Fig. 3: elapsed time vs N",
+     "benchmarks.bench_time_vs_n"),
+    ("accuracy", "paper §3: accuracy vs exact kNN (3000^2, r0=100, k=11)",
+     "benchmarks.bench_accuracy"),
+    ("resolution", "paper §2: resolution trade-off",
+     "benchmarks.bench_resolution"),
+    ("metrics", "paper §3: L1 vs L2",
+     "benchmarks.bench_metrics"),
+    ("convergence", "Eq. 1 radius-loop behaviour",
+     "benchmarks.bench_convergence"),
+    ("kernels", "kernel microbench + interpret validation",
+     "benchmarks.bench_kernels"),
+    ("lm_serve", "kNN-LM serving throughput",
+     "benchmarks.bench_lm_serve"),
+    ("roofline", "roofline table from the dry-run artifact",
+     "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", nargs="*", default=None,
+                    help=f"subset of {[b[0] for b in BENCHES]}")
+    args = ap.parse_args()
+
+    failures = 0
+    for name, desc, module in BENCHES:
+        if args.only and name not in args.only:
+            continue
+        print(f"\n=== {name}: {desc} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+            print(f"--- {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"--- {name} FAILED", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Beyond-paper: active-search retrieval memory makes long-context decode
+sub-quadratic for ATTENTION models (the long_500k path for full-attention
+archs — DESIGN.md §5).
+
+  PYTHONPATH=src python examples/long_context_retrieval.py
+
+Per decode step the token attends to (local window) U (top-m positions
+retrieved by active search over a grid index of key summaries) instead of the
+full KV cache.  The demo checks retrieval fidelity: positions whose keys
+resemble the query are found, and the retrieved-attention output stays close
+to full attention while touching O(w + m) << T entries.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import retrieval_memory as rmem
+from repro.models import model as M
+
+cfg = get_smoke("internlm2-1.8b")
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+
+B, S = 1, 512                 # demo scale; the dry-run proves 524,288
+tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+print(f"[example] prefill {S} tokens ...")
+_, caches, _ = M.prefill(params, cfg, {"tokens": tokens}, cache_len=S + 8)
+
+# ---- build the retrieval index from layer-0 key summaries ------------------
+mem_cfg = rmem.RetrievalMemoryConfig(
+    n_retrieved=32, local_window=64,
+    grid=rmem.RetrievalMemoryConfig().grid,
+)
+proj = rmem.make_projection(jax.random.PRNGKey(1), cfg.head_dim)
+k_cache = caches[0]["k"][0]                      # (B, T, Hkv, hd) layer 0
+keys = rmem.key_summary(k_cache[0, :S])          # (S, hd)
+index = rmem.build_memory_index(keys, mem_cfg, proj)
+print(f"[example] retrieval index over {index.n_points} positions")
+
+# ---- decode one token both ways ---------------------------------------------
+tok = jnp.asarray([5], jnp.int32)
+pos = jnp.int32(S)
+
+t0 = time.perf_counter()
+full_logits, _, _ = M.decode_step(params, cfg, caches, tok, pos)
+jax.block_until_ready(full_logits)
+t_full = time.perf_counter() - t0
+
+q_sum = rmem.query_summary(keys[S - 1][None, None, :])   # stand-in query
+retrieved, ok = rmem.retrieve_positions(index, mem_cfg, q_sum)
+print(f"[example] retrieved positions[:8]: {np.asarray(retrieved[0][:8])}")
+
+t0 = time.perf_counter()
+r_logits, _, _ = M.decode_step(
+    params, cfg, caches, tok, pos,
+    retrieved=(retrieved, ok, mem_cfg.local_window),
+)
+jax.block_until_ready(r_logits)
+t_ret = time.perf_counter() - t0
+
+# anchor: when (local window) U (retrieved) covers EVERY position, the
+# retrieval path must reproduce full attention exactly
+all_pos = jnp.arange(S - 64, dtype=jnp.int32)[None, :]
+anchor_logits, _, _ = M.decode_step(
+    params, cfg, caches, tok, pos,
+    retrieved=(all_pos, jnp.ones_like(all_pos, bool), 72),
+)
+
+def cos(a, b):
+    a = np.asarray(a.astype(jnp.float32)).ravel()
+    b = np.asarray(b.astype(jnp.float32)).ravel()
+    return float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b)))
+
+print(f"[example] full-coverage anchor: cos(logits) = "
+      f"{cos(anchor_logits, full_logits):.4f}  (must be ~1.0)")
+print(f"[example] sparse {mem_cfg.local_window}+{mem_cfg.n_retrieved} of {S}: "
+      f"cos(logits) = {cos(r_logits, full_logits):.4f}  (untrained weights -> "
+      "diffuse attention; trained models concentrate on retrieved hits)")
+print(f"[example] decode: full {t_full*1e3:.1f} ms, retrieved {t_ret*1e3:.1f} ms "
+      "(CPU timings are indicative only; the asymptotic win is O(w+m) vs O(T))")

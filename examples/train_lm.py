@@ -1,0 +1,52 @@
+"""End-to-end training driver: a ~100M-param decoder LM for a few hundred
+steps on the synthetic bigram corpus, with checkpointing + fault tolerance.
+
+  PYTHONPATH=src python examples/train_lm.py                 # ~100M, 300 steps
+  PYTHONPATH=src python examples/train_lm.py --fast          # 2-minute demo
+
+The loop is the production one (repro.launch.train): sharded step, async
+checkpoints every 50 steps, SIGTERM-safe, restart-from-checkpoint supervisor.
+On a TPU pod the same script runs with --data/--model mesh axes.
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import get_smoke
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import TrainConfig, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="tiny 2-minute demo")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    base = get_smoke("internlm2-1.8b")
+    if args.fast:
+        cfg = base                                      # ~1M params
+        tc = TrainConfig(steps=args.steps or 60, batch=8, seq=128,
+                         ckpt_dir=args.ckpt_dir, ckpt_every=25, log_every=10)
+    else:
+        # ~100M params: 12L x d768 x ff3072, vocab 8192
+        cfg = dataclasses.replace(
+            base, n_layers=12, d_model=768, head_dim=96, d_ff=3072,
+            vocab_size=8192,
+        )
+        tc = TrainConfig(steps=args.steps or 300, batch=8, seq=256,
+                         ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10)
+
+    n_params = cfg.param_count()
+    print(f"[example] arch={cfg.name} params~{n_params/1e6:.1f}M "
+          f"steps={tc.steps} global_batch={tc.batch}x{tc.seq}")
+    mesh = make_host_mesh(1, 1)
+    out = run(cfg, tc, mesh)
+    print(f"[example] loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f} "
+          f"over {out['final_step']} steps; stragglers={out['stragglers']}")
+    assert out["losses"][-1] < out["losses"][0]
+
+
+if __name__ == "__main__":
+    main()

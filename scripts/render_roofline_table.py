@@ -1,0 +1,71 @@
+"""Render the §Roofline markdown table from the dry-run artifact into
+EXPERIMENTS.md (replaces the placeholder/previous table between markers)."""
+
+import json
+import re
+import sys
+
+SINGLE = "runs/dryrun_single_v3.jsonl"
+BEGIN = "<!-- ROOFLINE TABLE BEGIN -->"
+END = "<!-- ROOFLINE TABLE END -->"
+
+
+def load(path):
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_ms(x):
+    return f"{x*1e3:,.1f}"
+
+
+def main():
+    recs = load(SINGLE)
+    rows = [
+        "| arch | shape | kind | compute ms | memory ms (fused) | collective ms "
+        "| bottleneck | 6ND/HLO | temp GiB | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(recs.items()):
+        if str(r.get("status", "")).startswith("SKIP"):
+            rows.append(
+                f"| {arch} | {shape} | — | — | — | — | — | — | — | "
+                "SKIP: pure full attention |"
+            )
+            continue
+        if r.get("status") != "OK":
+            rows.append(f"| {arch} | {shape} | — | — | — | — | — | — | — | {r['status']} |")
+            continue
+        roof = r["roofline"]
+        mem = (r.get("memory") or {}).get("temp_size_in_bytes", 0) / 2**30
+        note = "e2e active-search retrieval" if r.get("retrieval") else ""
+        ratio = r.get("model_flops_ratio") or 0
+        rows.append(
+            f"| {arch} | {shape} | {r['kind']} | {fmt_ms(roof['compute_s'])} "
+            f"| {fmt_ms(roof['memory_s'])} | {fmt_ms(roof['collective_s'])} "
+            f"| {roof['bottleneck']} | {ratio:.3f} | {mem:.2f} | {note} |"
+        )
+    table = "\n".join(rows)
+
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+    block = f"{BEGIN}\n{table}\n{END}"
+    if BEGIN in doc:
+        doc = re.sub(
+            re.escape(BEGIN) + r".*?" + re.escape(END), block, doc, flags=re.S
+        )
+    else:
+        doc = doc.replace(
+            "**(table below inserted from runs/dryrun_single_v3.jsonl)**", block
+        )
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print(f"rendered {len(recs)} cells into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Sharded checkpointing: npz-per-leaf-group + JSON manifest, async writes,
+atomic renames, elastic reshard-on-load.
+
+Layout:  <dir>/step_<k>/manifest.json + arrays.npz  (tmp dir + rename = atomic)
+Restore onto ANY mesh: arrays are loaded host-side and device_put with the
+TARGET sharding — train on mesh A, resume on mesh B (elastic scaling test).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path
+        )
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _treedef_of(tree: Any):
+    return jax.tree_util.tree_structure(tree)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending: Future | None = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- save ----
+
+    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+        """Snapshot to host memory NOW; write in the background (async)."""
+        flat = _flatten(tree)  # device_get happens here, synchronously
+
+        def write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step}")
+            final = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            manifest = {
+                "step": step,
+                "keys": sorted(flat),
+                "shapes": {k: list(v.shape) for k, v in flat.items()},
+                "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        with self._lock:
+            if self._pending is not None:
+                self._pending.result()  # one in flight at a time
+            self._pending = self._pool.submit(write)
+            if blocking:
+                self._pending.result()
+
+    def wait(self):
+        with self._lock:
+            if self._pending is not None:
+                self._pending.result()
+                self._pending = None
+
+    def _gc(self):
+        steps = sorted(self.list_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # ---------------------------------------------------------- restore ----
+
+    def list_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any | None = None) -> Any:
+        """Rebuild the pytree of `like` (structure donor).  If `shardings`
+        (same structure) is given, leaves are device_put with it — this is the
+        elastic reshard path: the target mesh can differ from the saved one."""
+        path = os.path.join(self.dir, f"step_{step}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+
+        leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
+        treedef = _treedef_of(like)
+        new_leaves = []
+        for p, leaf in leaves_with_path:
+            key = _SEP.join(
+                str(getattr(q, "key", getattr(q, "idx", getattr(q, "name", q)))) for q in p
+            )
+            arr = flat[key]
+            expect = tuple(leaf.shape)
+            if tuple(arr.shape) != expect:
+                raise ValueError(f"checkpoint shape mismatch at {key}: {arr.shape} vs {expect}")
+            new_leaves.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        if shardings is not None:
+            tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        return tree

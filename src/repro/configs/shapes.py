@@ -1,0 +1,78 @@
+"""Assigned input shapes and their ShapeDtypeStruct stand-ins.
+
+Four shapes per LM architecture (40 cells total):
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill_step
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 token, full cache)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; needs sub-quadratic
+               attention: native for ssm/hybrid, active-search retrieval memory
+               for the beyond-paper cells, SKIP for pure full-attention archs.
+
+input_specs() returns weak-type-correct ShapeDtypeStructs only — no device
+allocation ever happens for the full configs (dry-run contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Model-input ShapeDtypeStructs for train/prefill (tokens + frontends)."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: dict = {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+    if cfg.frontend == "audio":
+        # EnCodec frame embeddings arrive precomputed (assignment: frontend stub)
+        specs["frame_embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "vision":
+        specs["vision_embeds"] = _sds(
+            (b, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """serve_step inputs: one new token against a seq_len cache/state."""
+    b, s = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(lambda: M.init_caches(cfg, b, s))
+    return {
+        "caches": caches,
+        "token": _sds((b,), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape)
+    return batch_specs(cfg, shape)

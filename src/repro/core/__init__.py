@@ -1,0 +1,26 @@
+"""Core: the paper's active-search kNN as a composable JAX library."""
+
+from repro.core.grid import GridConfig, GridIndex, build_index
+from repro.core.projection import (
+    Projection,
+    gaussian_projection,
+    identity_projection,
+    pca_projection,
+)
+from repro.core.active_search import SearchResult, classify, search, search_one
+from repro.core import exact
+
+__all__ = [
+    "GridConfig",
+    "GridIndex",
+    "build_index",
+    "Projection",
+    "identity_projection",
+    "gaussian_projection",
+    "pca_projection",
+    "SearchResult",
+    "search",
+    "search_one",
+    "classify",
+    "exact",
+]

@@ -1,0 +1,212 @@
+"""Active search for nearest neighbors — the paper's algorithm, end to end.
+
+Pipeline per query (DESIGN.md §2):
+  1. project the query into grid space (projection.py)
+  2. adapt the radius with Eq. 1 over the count pyramid (pyramid.py)
+  3. gather candidates from the CSR buckets inside a fixed window around the
+     query cell (per-row contiguous slices — row-major cell ids make each
+     window row ONE contiguous span of `points_sorted`)
+  4. either return circle members (paper-faithful) or re-rank candidates by
+     the true metric in the original space (refined mode)
+
+All functions are jit/vmap friendly; fixed shapes throughout.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import projection as proj_lib
+from repro.core import pyramid as pyr
+from repro.core.grid import GridConfig, GridIndex
+
+
+class SearchResult(NamedTuple):
+    ids: jax.Array        # (k,) int32 — global point ids (-1 where invalid)
+    dists: jax.Array      # (k,) float32 — distance in the ORIGINAL space (inf where invalid)
+    labels: jax.Array     # (k,) int32
+    valid: jax.Array      # (k,) bool
+    radius: jax.Array     # () int32 — final Eq.-1 radius (pixels)
+    count: jax.Array      # () int32 — points inside the final circle
+    iters: jax.Array      # () int32
+    converged: jax.Array  # () bool — Eq. 1 hit the acceptance band
+    truncated: jax.Array  # () bool — circle exceeded the candidate window
+
+
+class Candidates(NamedTuple):
+    points: jax.Array   # (C, d) float32
+    coords: jax.Array   # (C, 2) float32 grid coords
+    labels: jax.Array   # (C,) int32
+    ids: jax.Array      # (C,) int32
+    valid: jax.Array    # (C,) bool
+
+
+def _metric_dist(a: jax.Array, b: jax.Array, metric: str) -> jax.Array:
+    diff = a - b
+    if metric == "l1":
+        return jnp.sum(jnp.abs(diff), axis=-1)
+    return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+
+
+def gather_candidates(index: GridIndex, cfg: GridConfig, q_grid: jax.Array) -> Candidates:
+    """Fixed-shape CSR gather of the window around the query cell.
+
+    Window rows are contiguous spans of the CSR arrays (row-major cell ids),
+    so each row costs one dynamic_slice of `row_cap` records.
+    """
+    g = cfg.padded_size
+    w, rcap = cfg.window, cfg.row_cap
+    n, d = index.points_sorted.shape
+
+    # pad the CSR arrays so a row_cap slice is always in bounds
+    pad = max(rcap - n, 0)
+    if pad:
+        pts = jnp.pad(index.points_sorted, ((0, pad), (0, 0)))
+        crd = jnp.pad(index.coords_sorted, ((0, pad), (0, 0)))
+        lab = jnp.pad(index.labels_sorted, (0, pad))
+        ids = jnp.pad(index.ids_sorted, (0, pad), constant_values=-1)
+    else:
+        pts, crd, lab, ids = (
+            index.points_sorted,
+            index.coords_sorted,
+            index.labels_sorted,
+            index.ids_sorted,
+        )
+    n_pad = n + pad
+
+    cx = jnp.floor(q_grid[0]).astype(jnp.int32)
+    cy = jnp.floor(q_grid[1]).astype(jnp.int32)
+    x0 = jnp.clip(cx - w // 2, 0, g - w)
+    y0 = jnp.clip(cy - w // 2, 0, g - w)
+
+    rows = x0 + jnp.arange(w, dtype=jnp.int32)              # (w,)
+    start = index.offsets[rows * g + y0]                     # (w,)
+    end = index.offsets[rows * g + (y0 + w)]                 # (w,)
+
+    def per_row(s, e):
+        s_cl = jnp.clip(s, 0, max(n_pad - rcap, 0))
+        j = s_cl + jnp.arange(rcap, dtype=jnp.int32)
+        p = lax.dynamic_slice(pts, (s_cl, 0), (rcap, d))
+        c = lax.dynamic_slice(crd, (s_cl, 0), (rcap, 2))
+        lb = lax.dynamic_slice(lab, (s_cl,), (rcap,))
+        gid = lax.dynamic_slice(ids, (s_cl,), (rcap,))
+        ok = (j >= s) & (j < e) & (j < n)
+        return p, c, lb, gid, ok
+
+    p, c, lb, gid, ok = jax.vmap(per_row)(start, end)
+    flat = lambda a: a.reshape((w * rcap,) + a.shape[2:])
+    return Candidates(flat(p), flat(c), flat(lb), flat(gid), flat(ok))
+
+
+def _topk_result(
+    cand: Candidates,
+    dists: jax.Array,
+    k: int,
+    stats: dict[str, jax.Array],
+    truncated: jax.Array,
+) -> SearchResult:
+    masked = jnp.where(cand.valid, dists, jnp.inf)
+    k_eff = min(k, masked.shape[0])
+    neg_top, idx = lax.top_k(-masked, k_eff)
+    if k_eff < k:  # k exceeds the candidate window: pad with invalid slots
+        pad = k - k_eff
+        neg_top = jnp.concatenate([neg_top, jnp.full((pad,), -jnp.inf)], axis=0)
+        idx = jnp.concatenate([idx, jnp.zeros((pad,), idx.dtype)], axis=0)
+    top_d = -neg_top
+    sel_valid = jnp.isfinite(top_d)
+    return SearchResult(
+        ids=jnp.where(sel_valid, cand.ids[idx], -1),
+        dists=top_d.astype(jnp.float32),
+        labels=jnp.where(sel_valid, cand.labels[idx], -1),
+        valid=sel_valid,
+        radius=stats["radius"],
+        count=stats["count"],
+        iters=stats["iters"],
+        converged=stats["converged"],
+        truncated=truncated,
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "mode"))
+def search_one(
+    index: GridIndex, cfg: GridConfig, query: jax.Array, k: int, mode: str = "refined"
+) -> SearchResult:
+    """Active search for ONE query point (original space, shape (d,)).
+
+    mode="paper":   members of the final circle, ranked by grid-pixel distance
+                    (the paper returns the circle contents when n == k).
+    mode="refined": candidates re-ranked by the true metric in the original
+                    space (exact kNN restricted to the window; recommended).
+    """
+    q_grid = proj_lib.to_grid_coords(index.proj, query, cfg.grid_size)
+    stats = pyr.radius_search(index, cfg, q_grid, k)
+    r = stats["radius"]
+    truncated = (2 * r + 1) > jnp.int32(cfg.window)
+
+    cand = gather_candidates(index, cfg, q_grid)
+    if mode == "paper":
+        centers = jnp.floor(cand.coords) + 0.5
+        gd = _metric_dist(centers, q_grid[None, :], cfg.metric)
+        in_circle = gd <= r.astype(jnp.float32)
+        cand = cand._replace(valid=cand.valid & in_circle)
+        return _topk_result(cand, gd, k, stats, truncated)
+
+    dists = _metric_dist(cand.points, query[None, :].astype(jnp.float32), cfg.metric)
+    return _topk_result(cand, dists, k, stats, truncated)
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "mode"))
+def search(
+    index: GridIndex, cfg: GridConfig, queries: jax.Array, k: int, mode: str = "refined"
+) -> SearchResult:
+    """Batched active search: queries (B, d) -> SearchResult with leading B."""
+    return jax.vmap(lambda q: search_one(index, cfg, q, k, mode))(queries)
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "mode"))
+def classify(
+    index: GridIndex, cfg: GridConfig, queries: jax.Array, k: int, mode: str = "refined"
+) -> jax.Array:
+    """kNN classification.
+
+    mode="paper":   argmax of per-class counts inside the final circle — pure
+                    count comparison on the class channels, exactly Fig. 2.
+    mode="refined": majority vote over the refined top-k labels.
+    """
+    if cfg.n_classes <= 0:
+        raise ValueError("classify() needs an index built with n_classes > 0")
+
+    if mode == "paper":
+
+        def one(q):
+            q_grid = proj_lib.to_grid_coords(index.proj, q, cfg.grid_size)
+            stats = pyr.radius_search(index, cfg, q_grid, k)
+            counts = pyr.count_in_circle(index, cfg, q_grid, stats["radius"])
+            return jnp.argmax(counts).astype(jnp.int32)
+
+        return jax.vmap(one)(queries)
+
+    res = search(index, cfg, queries, k, mode="refined")
+
+    def vote(labels, valid):
+        onehot = jax.nn.one_hot(labels, cfg.n_classes, dtype=jnp.float32)
+        return jnp.argmax(jnp.sum(onehot * valid[:, None], axis=0)).astype(jnp.int32)
+
+    refined = jax.vmap(vote)(res.labels, res.valid)
+
+    # graceful degradation: when the data is so sparse that the Eq.-1 circle
+    # outruns the candidate window (res.truncated / <k valid candidates), the
+    # window vote is under-sampled — fall back to the paper's count-based
+    # argmax at the final radius for THOSE queries only.
+    def count_pred(q, r):
+        q_grid = proj_lib.to_grid_coords(index.proj, q, cfg.grid_size)
+        return jnp.argmax(pyr.count_in_circle(index, cfg, q_grid, r)).astype(jnp.int32)
+
+    fallback = jax.vmap(count_pred)(queries, res.radius)
+    short = jnp.sum(res.valid.astype(jnp.int32), axis=1) < k
+    return jnp.where(short | res.truncated, fallback, refined)

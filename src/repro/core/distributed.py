@@ -1,0 +1,123 @@
+"""Sharded active-search index: query cost independent of N *per shard*.
+
+Cluster-scale layout (DESIGN.md §2): the datastore of N points is sharded
+along a mesh axis; every shard builds its OWN grid over the SAME global
+extents, with GLOBAL point ids.  A query (replicated) runs active search on
+all shards in parallel under shard_map, then the per-shard top-k lists
+(k * n_shards values — small) are merged with one all_gather + top_k.
+
+Per-shard query cost stays N-independent (the paper's property); the merge is
+O(k * n_shards), independent of N.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import active_search as act
+from repro.core.active_search import SearchResult
+from repro.core.grid import GridConfig, GridIndex, build_index
+from repro.core.projection import Projection
+
+
+def build_sharded_index(
+    points: jax.Array,
+    cfg: GridConfig,
+    proj: Projection,
+    mesh: Mesh,
+    axis: str,
+    labels: jax.Array | None = None,
+) -> GridIndex:
+    """Build one grid index per `axis` shard.
+
+    Returns a GridIndex whose array leaves carry a leading shard dimension of
+    size mesh.shape[axis], sharded along `axis`.  N must divide evenly.
+    """
+    n_shards = mesh.shape[axis]
+    n = points.shape[0]
+    if n % n_shards:
+        raise ValueError(f"N={n} must divide n_shards={n_shards}")
+    n_local = n // n_shards
+
+    if labels is None:
+        labels = jnp.zeros((n,), dtype=jnp.int32)
+
+    def local_build(pts, lab):
+        # leading shard dim is 1 inside shard_map
+        shard = lax.axis_index(axis)
+        gids = shard * n_local + jnp.arange(n_local, dtype=jnp.int32)
+        idx = build_index(pts[0], cfg, proj, labels=lab[0], ids=gids)
+        return jax.tree.map(lambda a: a[None], idx)
+
+    pts_s = points.reshape(n_shards, n_local, -1)
+    lab_s = labels.reshape(n_shards, n_local)
+    fn = shard_map(
+        local_build,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=P(axis),
+        check_rep=False,
+    )
+    return fn(pts_s, lab_s)
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "mode", "axis", "mesh"))
+def sharded_search(
+    index: GridIndex,
+    cfg: GridConfig,
+    queries: jax.Array,
+    k: int,
+    mesh: Mesh,
+    axis: str,
+    mode: str = "refined",
+) -> SearchResult:
+    """Active search over the sharded index; queries (B, d) replicated.
+
+    Returns the globally merged top-k per query (ids are global point ids).
+    """
+
+    def local_query(idx_stacked, q):
+        idx = jax.tree.map(lambda a: a[0], idx_stacked)
+        res = act.search(idx, cfg, q, k, mode=mode)          # (B, k) per-shard
+        d_all = lax.all_gather(res.dists, axis)               # (S, B, k)
+        i_all = lax.all_gather(res.ids, axis)
+        l_all = lax.all_gather(res.labels, axis)
+        b = q.shape[0]
+        d_flat = jnp.moveaxis(d_all, 0, 1).reshape(b, -1)     # (B, S*k)
+        i_flat = jnp.moveaxis(i_all, 0, 1).reshape(b, -1)
+        l_flat = jnp.moveaxis(l_all, 0, 1).reshape(b, -1)
+        neg, sel = lax.top_k(-d_flat, k)
+        top_d = -neg
+        ok = jnp.isfinite(top_d)
+        merged = SearchResult(
+            ids=jnp.where(ok, jnp.take_along_axis(i_flat, sel, axis=1), -1),
+            dists=top_d,
+            labels=jnp.where(ok, jnp.take_along_axis(l_flat, sel, axis=1), -1),
+            valid=ok,
+            # diagnostics: reduce across shards
+            radius=lax.pmax(res.radius, axis),
+            count=lax.psum(res.count, axis),
+            iters=lax.pmax(res.iters, axis),
+            converged=jnp.logical_and(
+                lax.pmin(res.converged.astype(jnp.int32), axis) > 0, True
+            ),
+            truncated=lax.pmax(res.truncated.astype(jnp.int32), axis) > 0,
+        )
+        return merged
+
+    in_specs = (P(axis), P())
+    out_specs = P()
+    fn = shard_map(
+        local_query, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+    return fn(index, queries)
+
+
+def replicate_queries(queries: jax.Array, mesh: Mesh) -> jax.Array:
+    return jax.device_put(queries, NamedSharding(mesh, P()))

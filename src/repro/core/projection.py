@@ -1,0 +1,92 @@
+"""Projection front-end: original d-dim space -> low-dim grid space.
+
+The paper works directly on 2-D data ("this approach can be applied to higher
+dimensional data, though it will require a much bigger memory").  A dense
+d-dim raster is memory-exponential, so production use puts a projection in
+front of the grid and re-ranks candidates in the original space (DESIGN.md §2).
+
+Projections are pytrees; all functions are jit/vmap friendly.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Projection(NamedTuple):
+    """Affine map  x -> x @ matrix  with grid extents [lo, hi] per grid dim."""
+
+    matrix: jax.Array  # (d, gd) float32
+    lo: jax.Array      # (gd,) float32
+    hi: jax.Array      # (gd,) float32
+
+    @property
+    def grid_dim(self) -> int:
+        return self.matrix.shape[1]
+
+
+def apply(proj: Projection, x: jax.Array) -> jax.Array:
+    """Project points (..., d) into grid space (..., gd)."""
+    return x.astype(jnp.float32) @ proj.matrix
+
+
+def _extents(g: jax.Array, margin: float) -> tuple[jax.Array, jax.Array]:
+    lo = jnp.min(g, axis=0)
+    hi = jnp.max(g, axis=0)
+    span = jnp.maximum(hi - lo, 1e-6)
+    return lo - margin * span, hi + margin * span
+
+
+def identity_projection(points: jax.Array, margin: float = 0.01) -> Projection:
+    """Paper-faithful: grid space IS the data space (d == gd)."""
+    d = points.shape[-1]
+    mat = jnp.eye(d, dtype=jnp.float32)
+    lo, hi = _extents(points.astype(jnp.float32), margin)
+    return Projection(mat, lo, hi)
+
+
+def gaussian_projection(
+    key: jax.Array, points: jax.Array, grid_dim: int = 2, margin: float = 0.01
+) -> Projection:
+    """Random Gaussian projection (Johnson-Lindenstrauss style) to `grid_dim`."""
+    d = points.shape[-1]
+    mat = jax.random.normal(key, (d, grid_dim), dtype=jnp.float32) / jnp.sqrt(d)
+    g = points.astype(jnp.float32) @ mat
+    lo, hi = _extents(g, margin)
+    return Projection(mat, lo, hi)
+
+
+def pca_projection(points: jax.Array, grid_dim: int = 2, margin: float = 0.01) -> Projection:
+    """Top-`grid_dim` principal directions — a better-behaved learned projection.
+
+    Computed with one eigendecomposition of the (d, d) covariance; d is the
+    embedding dim (<= a few thousand), never N.
+    """
+    x = points.astype(jnp.float32)
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    xc = x - mu
+    cov = (xc.T @ xc) / x.shape[0]
+    _, vecs = jnp.linalg.eigh(cov)          # ascending eigenvalues
+    mat = vecs[:, -grid_dim:][:, ::-1]       # (d, gd), top components first
+    g = x @ mat
+    lo, hi = _extents(g, margin)
+    return Projection(mat, lo, hi)
+
+
+def to_grid_coords(proj: Projection, x: jax.Array, grid_size: int) -> jax.Array:
+    """Continuous grid coordinates in [0, grid_size) per grid dim, float32.
+
+    Pixel (i, j) covers [i, i+1) x [j, j+1); a point's pixel is floor(coords).
+    """
+    g = apply(proj, x)
+    span = jnp.maximum(proj.hi - proj.lo, 1e-6)
+    c = (g - proj.lo) / span * grid_size
+    return jnp.clip(c, 0.0, grid_size - 1e-3)
+
+
+def to_cells(proj: Projection, x: jax.Array, grid_size: int) -> jax.Array:
+    """Integer cell indices (..., gd) int32 in [0, grid_size)."""
+    return jnp.floor(to_grid_coords(proj, x, grid_size)).astype(jnp.int32)

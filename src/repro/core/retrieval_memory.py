@@ -1,0 +1,73 @@
+"""Retrieval-augmented attention memory — beyond-paper long-context feature.
+
+Memorizing-Transformers-style: at decode time a token attends to (a) a local
+window of recent KV entries and (b) the top-m PAST positions retrieved by
+active search over a grid index built on per-token key summaries.  Per-step
+cost is O(local_window + m) instead of O(S): the paper's N-independent search
+is exactly what makes 500k-token decode sub-quadratic for attention models
+(DESIGN.md §5, beyond-paper extension).
+
+The index key for a token is a summary of its attention keys (mean over KV
+heads), projected to grid space; the query summary is the mean over query
+heads.  Retrieval returns POSITIONS; the attention layer gathers their K/V.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import active_search as act
+from repro.core.grid import GridConfig, GridIndex, build_index
+from repro.core.projection import Projection, gaussian_projection
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalMemoryConfig:
+    n_retrieved: int = 64     # m: positions fetched per decode step
+    local_window: int = 512   # recent tokens attended exactly
+    grid: GridConfig = dataclasses.field(
+        default_factory=lambda: GridConfig(
+            grid_size=2048, tile=16, window=32, row_cap=64, r0=8, k_slack=4.0,
+            max_iters=12,
+        )
+    )
+
+
+def key_summary(k_heads: jax.Array) -> jax.Array:
+    """(S, n_kv, hd) -> (S, hd): the per-token index key."""
+    return jnp.mean(k_heads.astype(jnp.float32), axis=-2)
+
+
+def query_summary(q_heads: jax.Array) -> jax.Array:
+    """(B, n_q, hd) -> (B, hd)."""
+    return jnp.mean(q_heads.astype(jnp.float32), axis=-2)
+
+
+def make_projection(key: jax.Array, head_dim: int) -> Projection:
+    """Fixed random projection shared by keys and queries (data-independent,
+    so the index can be extended without re-fitting extents)."""
+    mat = jax.random.normal(key, (head_dim, 2), dtype=jnp.float32) / jnp.sqrt(head_dim)
+    # attention keys are RMS-normed activations: |summary| is O(1); generous extents
+    lo = jnp.full((2,), -4.0, jnp.float32)
+    hi = jnp.full((2,), 4.0, jnp.float32)
+    return Projection(mat, lo, hi)
+
+
+def build_memory_index(
+    keys: jax.Array, cfg: RetrievalMemoryConfig, proj: Projection
+) -> GridIndex:
+    """keys: (S, hd) per-token key summaries.  ids_sorted are positions."""
+    return build_index(keys, cfg.grid, proj)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def retrieve_positions(
+    index: GridIndex, cfg: RetrievalMemoryConfig, q_sum: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """q_sum: (B, hd) -> positions (B, m) int32 and validity (B, m) bool."""
+    res = act.search(index, cfg.grid, q_sum, cfg.n_retrieved, mode="refined")
+    return jnp.maximum(res.ids, 0), res.valid

@@ -1,0 +1,50 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+`interpret` defaults to True because this container is CPU-only; on a real
+TPU deployment set REPRO_PALLAS_INTERPRET=0 (or pass interpret=False) and the
+same kernels compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.brute_knn import brute_knn as _brute_knn
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.candidate_topk import candidate_topk as _candidate_topk
+from repro.kernels.tile_count import tile_count as _tile_count
+
+
+def _default_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def tile_count(level_arr, queries, radii, scale, tile, metric="l2", interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _tile_count(
+        level_arr, queries, radii, scale, tile, metric=metric, interpret=interpret
+    )
+
+
+def candidate_topk(candidates, valid, queries, k, metric="l2", d_chunk=512, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _candidate_topk(
+        candidates, valid, queries, k, metric=metric, d_chunk=d_chunk, interpret=interpret
+    )
+
+
+def brute_knn(queries, points, k, block_q=128, block_n=512, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _brute_knn(
+        queries, points, k, block_q=block_q, block_n=block_n, interpret=interpret
+    )
+
+
+def flash_attention(q, k, v, causal=True, block_q=512, block_k=512, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors the exact contract of its kernel in ops.py; kernel tests
+sweep shapes/dtypes and assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def tile_count(
+    level_arr: jax.Array,   # (S, S, C) int32 — one pyramid level
+    queries: jax.Array,     # (B, 2) float32 — positions in BASE-pixel units
+    radii: jax.Array,       # (B,) float32 — radii in base-pixel units
+    scale: int,             # 2**level
+    tile: int,              # T — window side in level cells
+    metric: str = "l2",
+) -> jax.Array:
+    """Circle-masked counts (B, C): count of points whose level-cell center
+    lies within radius of the query.  Matches pyramid._count_at_level."""
+    s = level_arr.shape[0]
+
+    def one(q, r):
+        cx = jnp.floor(q[0] / scale).astype(jnp.int32)
+        cy = jnp.floor(q[1] / scale).astype(jnp.int32)
+        ox = jnp.clip(cx - tile // 2, 0, s - tile)
+        oy = jnp.clip(cy - tile // 2, 0, s - tile)
+        window = lax.dynamic_slice(level_arr, (ox, oy, 0), (tile, tile, level_arr.shape[-1]))
+        ci = (ox + jnp.arange(tile, dtype=jnp.float32) + 0.5) * scale
+        cj = (oy + jnp.arange(tile, dtype=jnp.float32) + 0.5) * scale
+        if metric == "l1":
+            mask = (jnp.abs(ci - q[0])[:, None] + jnp.abs(cj - q[1])[None, :]) <= r
+        else:
+            d2 = (ci - q[0])[:, None] ** 2 + (cj - q[1])[None, :] ** 2
+            mask = d2 <= r * r
+        return jnp.sum(window * mask[:, :, None].astype(jnp.int32), axis=(0, 1))
+
+    return jax.vmap(one)(queries.astype(jnp.float32), radii.astype(jnp.float32))
+
+
+def candidate_topk(
+    candidates: jax.Array,  # (B, C, d) float32
+    valid: jax.Array,       # (B, C) bool
+    queries: jax.Array,     # (B, d) float32
+    k: int,
+    metric: str = "l2",
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k smallest distances among valid candidates.
+    Returns dists (B, k) float32 (inf when <k valid) and idx (B, k) int32
+    (candidate row index, -1 when invalid)."""
+    diff = candidates - queries[:, None, :]
+    if metric == "l1":
+        d = jnp.sum(jnp.abs(diff), axis=-1)
+    else:
+        d = jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+    d = jnp.where(valid, d, jnp.inf)
+    neg, idx = lax.top_k(-d, k)
+    dists = -neg
+    return dists, jnp.where(jnp.isfinite(dists), idx.astype(jnp.int32), -1)
+
+
+def brute_knn(
+    queries: jax.Array,  # (B, d) float32
+    points: jax.Array,   # (N, d) float32
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Exact L2 kNN.  Returns dists (B, k) ascending and ids (B, k) int32."""
+    q = queries.astype(jnp.float32)
+    x = points.astype(jnp.float32)
+    d2 = (
+        jnp.sum(q * q, axis=-1, keepdims=True)
+        - 2.0 * (q @ x.T)
+        + jnp.sum(x * x, axis=-1)[None, :]
+    )
+    d = jnp.sqrt(jnp.maximum(d2, 0.0))
+    neg, idx = lax.top_k(-d, k)
+    return -neg, idx.astype(jnp.int32)
+
+
+def flash_attention(
+    q: jax.Array,   # (B, S, H, hd)
+    k: jax.Array,   # (B, T, H, hd)
+    v: jax.Array,
+    causal: bool = True,
+) -> jax.Array:
+    """Plain softmax attention — the flash_attention oracle."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s_ = jnp.einsum("bshk,bthk->bhst", qf, kf) / jnp.sqrt(q.shape[-1])
+    if causal:
+        sq, tk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(tk)[None, :]
+        s_ = jnp.where(mask[None, None], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    return jnp.einsum("bhst,bthk->bshk", p, vf).astype(q.dtype)

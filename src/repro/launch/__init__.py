@@ -1,0 +1,1 @@
+"""Launch layer: production mesh, jitted step factories, dry-run, drivers."""

@@ -1,0 +1,237 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh) cell, per the assignment:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_chip / HBM_bw_per_chip
+    collective = collective_bytes_per_chip / link_bw
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis() (the SPMD-partitioned
+per-device program).  collective_bytes is parsed from the optimized HLO text:
+the summed OUTPUT operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops (bytes landing on each device — the
+receive-side traffic a link must carry).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %ag = (bf16[8,128]{1,0}, f32[4]{0}) all-gather(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_COMP_HEAD = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+# fusion bodies and reducer lambdas are not materialized; while bodies ARE
+# (and appear once — fine for the unrolled probes, which have no whiles)
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_NO_WRITE = (
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "token",
+)
+
+
+def fused_bytes(hlo_text: str, shape_pred=None) -> int:
+    """HBM bytes WRITTEN by materialized buffers: sum of output shapes of ops
+    in every computation EXCEPT fusion bodies (fusion internals live in
+    registers/VMEM).  cost_analysis()'s 'bytes accessed' counts every op as
+    if unfused — a ~10-20x overestimate of real HBM traffic on a fused
+    executable; this is the fused-buffer lower-ish bound.  Exact for the
+    unrolled cost probes (no while loops).
+
+    shape_pred(dims: list[int]) optionally restricts the count to matching
+    buffers (used to attribute bytes to e.g. attention-score shapes)."""
+    # map computation -> op output bytes; find fusion-called computations
+    comps: dict[str, int] = {}
+    fusion_bodies: set[str] = set()
+    current = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _COMP_HEAD.match(stripped)
+        if m and stripped.endswith("{"):
+            current = m.group(2)
+            comps.setdefault(current, 0)
+            continue
+        if stripped.startswith("}"):
+            current = None
+            continue
+        if current is None or "=" not in stripped:
+            continue
+        rhs = stripped.split("=", 1)[1].strip()
+        op_m = re.match(r"(\([^)]*\)|\S+)\s+([\w\-]+)", rhs)
+        if not op_m:
+            continue
+        shape_str, opname = op_m.group(1), op_m.group(2)
+        # any op's calls=/to_apply= computation is inlined, not materialized
+        for c in _CALLS_RE.findall(stripped):
+            fusion_bodies.add(c)
+        if opname in _NO_WRITE:
+            continue
+        if shape_pred is not None:
+            sm = _SHAPE_RE.search(shape_str)
+            if not sm:
+                continue
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            if not shape_pred(dims):
+                continue
+        comps[current] += _shape_bytes(shape_str)
+    return sum(b for name, b in comps.items() if name not in fusion_bodies)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-op-kind OUTPUT bytes of every collective in the optimized HLO.
+
+    `-done` ops re-state the tuple shape of their `-start`; counting only
+    `-start` (and un-suffixed sync forms) avoids double counting."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per-chip HLO FLOPs
+    hbm_bytes: float           # per-chip HLO bytes accessed (UNFUSED upper bound)
+    coll_bytes: float          # per-chip collective bytes (receive side)
+    coll_by_kind: dict[str, int]
+    chips: int
+    fused_hbm_bytes: float = 0.0   # materialized-buffer writes (fused estimate)
+    compute_s: float = 0.0
+    memory_s: float = 0.0          # from fused bytes when available
+    memory_upper_s: float = 0.0    # from unfused bytes
+    collective_s: float = 0.0
+    bottleneck: str = ""
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.flops / PEAK_FLOPS
+        self.memory_upper_s = self.hbm_bytes / HBM_BW
+        mem_bytes = self.fused_hbm_bytes or self.hbm_bytes
+        self.memory_s = mem_bytes / HBM_BW
+        self.collective_s = self.coll_bytes / LINK_BW
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        self.bottleneck = max(terms, key=terms.get)
+        return self
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-model step time: max of the three terms (full overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict[str, Any]:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "fused_hbm_bytes_per_chip": self.fused_hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "coll_by_kind": self.coll_by_kind,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "memory_upper_s": self.memory_upper_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+        }
+
+
+def from_compiled(compiled, chips: int, hlo_text: str | None = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=float(sum(coll.values())),
+        coll_by_kind=coll,
+        chips=chips,
+        fused_hbm_bytes=float(fused_bytes(text)),
+    ).finalize()
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """Useful-work FLOPs: 6 * N_active * tokens (the standard 6ND estimate)."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens   # forward only
+    # decode: one token per sequence; attention reads the cache but 2ND
+    # stays the useful-FLOPs yardstick
+    return 2.0 * n_active * shape.global_batch
+
+
+def memory_analysis_dict(compiled) -> dict[str, float] | None:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    keys = (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    )
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out or None

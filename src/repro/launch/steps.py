@@ -1,0 +1,389 @@
+"""Jitted step factories: train_step / prefill_step / serve_step with explicit
+in/out shardings, ready for .lower().compile() (dry-run) or real execution.
+
+All factories take the mesh and return (jitted_fn, input ShapeDtypeStructs) so
+the dry-run and the real drivers share one code path.  State args are donated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import shapes as shp
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw, compression
+from repro.parallel import axes
+from repro.parallel import sharding as sh
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    accum: int = 1                 # gradient-accumulation microbatches
+    compress_grads: bool = False   # int8 error-feedback gradient compression
+    aux_weight: float = 0.01
+    # cast params to bf16 ONCE per step before the layer scan: weight
+    # all-gathers and HBM reads move half the bytes; fp32 masters stay in the
+    # optimizer (EXPERIMENTS.md, hillclimb cell b).  Matrices only.
+    bf16_compute_copy: bool = True
+
+
+def _compute_copy(params):
+    return jax.tree.map(
+        lambda p: p.astype(jnp.bfloat16)
+        if (p.dtype == jnp.float32 and p.ndim >= 2) else p,
+        params,
+    )
+
+
+def _ns(mesh: Mesh, tree_specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ----------------------------------------------------------------- state ----
+
+
+def train_state_shapes(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, step_cfg: StepConfig):
+    """abstract (ShapeDtypeStruct) train state — no allocation."""
+
+    def build():
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        state = {
+            "params": params,
+            "opt": adamw.init(params),
+            "step": jnp.int32(0),
+        }
+        if step_cfg.compress_grads:
+            state["err"] = compression.init_error(params)
+        return state
+
+    return jax.eval_shape(build)
+
+
+def train_state_specs(state: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    pspecs = sh.param_specs(state["params"], cfg, mesh)
+    specs = {
+        "params": pspecs,
+        "opt": adamw.OptState(mu=pspecs, nu=pspecs, count=P()),
+        "step": P(),
+    }
+    if "err" in state:
+        specs["err"] = pspecs
+    return specs
+
+
+def init_train_state(
+    key, cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, step_cfg: StepConfig, mesh: Mesh
+) -> Any:
+    """Real, sharded initialization (used by train.py; jitted so each device
+    materializes only its own param shards)."""
+    abstract = train_state_shapes(cfg, opt_cfg, step_cfg)
+    specs = train_state_specs(abstract, cfg, mesh)
+
+    def build(k):
+        params = M.init_params(k, cfg)
+        state = {"params": params, "opt": adamw.init(params), "step": jnp.int32(0)}
+        if step_cfg.compress_grads:
+            state["err"] = compression.init_error(params)
+        return state
+
+    with mesh:
+        return jax.jit(build, out_shardings=_ns(mesh, specs))(key)
+
+
+# ------------------------------------------------------------- train step ----
+
+
+def _microbatch(batch: dict, accum: int) -> dict:
+    def split(leaf):
+        b = leaf.shape[0]
+        assert b % accum == 0, f"batch {b} % accum {accum}"
+        return leaf.reshape(accum, b // accum, *leaf.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    mesh: Mesh,
+    step_cfg: StepConfig = StepConfig(),
+) -> Callable:
+    """(state, batch) -> (state, metrics), jitted with explicit shardings."""
+
+    def grads_of(params, batch):
+        if step_cfg.bf16_compute_copy:
+            def loss_of(p):
+                return M.loss_fn(_compute_copy(p), cfg, batch, step_cfg.aux_weight)
+        else:
+            def loss_of(p):
+                return M.loss_fn(p, cfg, batch, step_cfg.aux_weight)
+        (loss, parts), grads = jax.value_and_grad(loss_of, has_aux=True)(params)
+        return grads, {"loss": loss, **parts}
+
+    accum = step_cfg.accum if step_cfg.accum > 1 else max(cfg.policy.accum, 1)
+
+    def train_step(state, batch):
+        b = jax.tree.leaves(batch)[0].shape[0]
+        rules = axes.axis_rules(mesh, axes.default_rules(cfg, mesh, b))
+        with rules:
+            return _train_step_body(state, batch)
+
+    def _train_step_body(state, batch):
+        params = state["params"]
+        if accum == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            micro = _microbatch(batch, accum)
+
+            def body(carry, mb):
+                acc, _ = carry
+                g, met = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g
+                )
+                return (acc, met), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            dummy = {
+                "loss": jnp.float32(0), "nll": jnp.float32(0), "aux": jnp.float32(0)
+            }
+            (gsum, metrics), _ = lax.scan(body, (zeros, dummy), micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+
+        new_state = dict(state)
+        if step_cfg.compress_grads:
+            grads, new_err = compression.compress_grads(grads, state["err"])
+            new_state["err"] = new_err
+        params, opt, opt_metrics = adamw.update(opt_cfg, grads, state["opt"], params)
+        new_state["params"] = params
+        new_state["opt"] = opt
+        new_state["step"] = state["step"] + 1
+        return new_state, {**metrics, **opt_metrics}
+
+    abstract = train_state_shapes(cfg, opt_cfg, step_cfg)
+    state_sh = _ns(mesh, train_state_specs(abstract, cfg, mesh))
+    shape = None  # batch sharding is shape-generic
+    batch_sh = lambda batch: _ns(mesh, sh.batch_specs(batch, mesh, cfg))  # noqa: E731
+
+    def jit_for(batch_abstract):
+        return jax.jit(
+            train_step,
+            in_shardings=(state_sh, batch_sh(batch_abstract)),
+            out_shardings=(state_sh, _ns(mesh, jax.tree.map(lambda _: P(), {
+                "loss": 0, "nll": 0, "aux": 0, "grad_norm": 0, "lr": 0
+            }))),
+            donate_argnums=(0,),
+        )
+
+    return train_step, abstract, state_sh, jit_for
+
+
+# ---------------------------------------------------------- prefill step ----
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    """(params, batch) -> (logits (B,V), caches, hidden (B,d))."""
+
+    def prefill_step(params, batch):
+        b = jax.tree.leaves(batch)[0].shape[0]
+        with axes.axis_rules(mesh, axes.default_rules(cfg, mesh, b)):
+            return M.prefill(params, cfg, batch)
+
+    full_abs = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    params_sh = _ns(mesh, sh.param_specs(full_abs, cfg, mesh))
+
+    def jit_for(batch_abstract):
+        b = jax.tree.leaves(batch_abstract)[0].shape[0]
+        dp = sh.dp_axes_for(b, mesh, cfg.policy.dp_only)
+        mdl = "model" if "model" in mesh.axis_names else None
+        logits_spec = sh.fit_pspec(P(dp, mdl), (b, cfg.vocab_size), mesh)
+        return jax.jit(
+            prefill_step,
+            in_shardings=(params_sh, _ns(mesh, sh.batch_specs(batch_abstract, mesh, cfg))),
+            out_shardings=(
+                NamedSharding(mesh, logits_spec),      # logits (B, V)
+                None,                                  # caches: let GSPMD place
+                NamedSharding(mesh, P(dp, None)),      # hidden (B, d)
+            ),
+        )
+
+    return prefill_step, full_abs, params_sh, jit_for
+
+
+# ------------------------------------------------------------ serve step ----
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, retrieval: tuple[int, int] | None = None):
+    """One decode step: (params, caches, token, pos[, retrieved, ok]) ->
+    (logits (B, V), caches, hidden (B, d)).  Caches are donated.
+
+    retrieval=(m, local_window) enables the active-search retrieval-memory
+    decode path (sub-quadratic long-context for attention archs)."""
+
+    if retrieval is None:
+
+        def serve_step(params, caches, token, pos):
+            with axes.axis_rules(mesh, axes.default_rules(cfg, mesh, token.shape[0])):
+                return M.decode_step(params, cfg, caches, token, pos)
+
+    else:
+        m, local_window = retrieval
+
+        def serve_step(params, caches, token, pos, retrieved, retrieved_ok):
+            with axes.axis_rules(mesh, axes.default_rules(cfg, mesh, token.shape[0])):
+                return M.decode_step(
+                    params, cfg, caches, token, pos,
+                    retrieved=(retrieved, retrieved_ok, local_window),
+                )
+
+    full_abs = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    params_sh = _ns(mesh, sh.param_specs(full_abs, cfg, mesh))
+
+    def jit_for(decode_abstract: dict):
+        b = decode_abstract["token"].shape[0]
+        dp = sh.dp_axes_for(b, mesh, cfg.policy.dp_only)
+        mdl = "model" if "model" in mesh.axis_names else None
+        logits_spec = sh.fit_pspec(P(dp, mdl), (b, cfg.vocab_size), mesh)
+        caches_sh = _ns(mesh, sh.cache_specs(decode_abstract["caches"], cfg, mesh, b))
+        in_sh = [params_sh, caches_sh,
+                 NamedSharding(mesh, P(dp)), NamedSharding(mesh, P())]
+        if retrieval is not None:
+            in_sh += [NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P(dp, None))]
+        return jax.jit(
+            serve_step,
+            in_shardings=tuple(in_sh),
+            out_shardings=(
+                NamedSharding(mesh, logits_spec),  # logits
+                caches_sh,
+                NamedSharding(mesh, P(dp, None)),  # hidden
+            ),
+            donate_argnums=(1,),
+        )
+
+    return serve_step, full_abs, params_sh, jit_for
+
+
+# -------------------------------------------- e2e retrieval serve step ------
+
+
+def make_retrieval_serve_step(cfg: ModelConfig, mesh: Mesh, mem_cfg=None):
+    """long_500k serve step with the paper's ACTIVE SEARCH inside the lowered
+    program: (params, caches, index, token, pos) -> (logits, caches, hidden).
+
+    Per step: embed the token, summarize its layer-0 query projection, run the
+    Eq.-1 radius search + candidate re-rank over the grid index of key
+    summaries (all jittable), then decode attending only to
+    (local window) U (retrieved positions).  The search cost — the paper's
+    contribution — is thereby part of cost_analysis for this cell."""
+    from repro.core import active_search as act
+    from repro.core import retrieval_memory as rmem
+
+    if mem_cfg is None:
+        mem_cfg = rmem.RetrievalMemoryConfig()
+
+    def serve_step(params, caches, index, token, pos):
+        x = params["embed"][token][:, None, :].astype(jnp.bfloat16)
+        wq0 = params["blocks"][0]["core"]["wq"][0]          # (d, H, hd)
+        q0 = jnp.einsum("bsd,dhk->bshk", x, wq0.astype(x.dtype))
+        q_sum = jnp.mean(q0[:, 0].astype(jnp.float32), axis=1)   # (B, hd)
+        res = act.search(index, mem_cfg.grid, q_sum, mem_cfg.n_retrieved)
+        retrieved = jnp.maximum(res.ids, 0)
+        ok = res.valid & (retrieved < pos)
+        return M.decode_step(
+            params, cfg, caches, token, pos,
+            retrieved=(retrieved, ok, mem_cfg.local_window),
+        )
+
+    full_abs = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    params_sh = _ns(mesh, sh.param_specs(full_abs, cfg, mesh))
+
+    def index_abstract(n_keys: int):
+        from repro.core.grid import build_index
+        from repro.core.projection import Projection
+
+        def build():
+            proj = Projection(
+                jnp.zeros((cfg.head_dim, 2), jnp.float32),
+                jnp.zeros((2,), jnp.float32), jnp.ones((2,), jnp.float32),
+            )
+            keys = jnp.zeros((n_keys, cfg.head_dim), jnp.float32)
+            return build_index(keys, mem_cfg.grid, proj)
+
+        return jax.eval_shape(build)
+
+    def jit_for(decode_abstract: dict, index_abs):
+        b = decode_abstract["token"].shape[0]
+        dp = sh.dp_axes_for(b, mesh, cfg.policy.dp_only)
+        mdl = "model" if "model" in mesh.axis_names else None
+        logits_spec = sh.fit_pspec(P(dp, mdl), (b, cfg.vocab_size), mesh)
+        caches_sh = _ns(mesh, sh.cache_specs(decode_abstract["caches"], cfg, mesh, b))
+        index_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), index_abs)
+        return jax.jit(
+            serve_step,
+            in_shardings=(params_sh, caches_sh, index_sh,
+                          NamedSharding(mesh, P(dp)), NamedSharding(mesh, P())),
+            out_shardings=(
+                NamedSharding(mesh, logits_spec),
+                caches_sh,
+                NamedSharding(mesh, P(dp, None)),
+            ),
+            donate_argnums=(1,),
+        )
+
+    return serve_step, full_abs, params_sh, index_abstract, jit_for
+
+
+# ----------------------------------------------------- dry-run cell entry ----
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape_name: str,
+    mesh: Mesh,
+    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+    step_cfg: StepConfig = StepConfig(),
+    retrieval: tuple[int, int] | None = None,
+):
+    """Lower one (arch x shape x mesh) cell.  Returns (lowered, kind)."""
+    shape = shp.SHAPES[shape_name]
+    with mesh:
+        if shape.kind == "train":
+            _, state_abs, state_sh, jit_for = make_train_step(cfg, opt_cfg, mesh, step_cfg)
+            batch_abs = shp.batch_specs(cfg, shape)
+            lowered = jit_for(batch_abs).lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            _, params_abs, params_sh, jit_for = make_prefill_step(cfg, mesh)
+            batch_abs = shp.batch_specs(cfg, shape)
+            lowered = jit_for(batch_abs).lower(params_abs, batch_abs)
+        elif shape.kind == "decode" and retrieval is not None:
+            # e2e: active search INSIDE the lowered step (index over one key
+            # summary per cached position)
+            _, params_abs, params_sh, index_abstract, jit_for = (
+                make_retrieval_serve_step(cfg, mesh)
+            )
+            dec = shp.decode_specs(cfg, shape)
+            index_abs = index_abstract(shape.seq_len)
+            lowered = jit_for(dec, index_abs).lower(
+                params_abs, dec["caches"], index_abs, dec["token"], dec["pos"]
+            )
+        else:  # decode
+            _, params_abs, params_sh, jit_for = make_serve_step(cfg, mesh)
+            dec = shp.decode_specs(cfg, shape)
+            lowered = jit_for(dec).lower(
+                params_abs, dec["caches"], dec["token"], dec["pos"]
+            )
+    return lowered, shape.kind

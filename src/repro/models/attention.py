@@ -1,0 +1,228 @@
+"""GQA attention with KV cache: chunked-causal train/prefill, O(1) decode,
+and the beyond-paper retrieval-augmented decode path (core/retrieval_memory).
+
+Layout conventions (logical axes -> parallel/axes.py rules):
+  activations  (B, S, d)           — B -> "batch"
+  q/k/v        (B, S, H, hd)       — H -> "heads" (falls back to head_dim)
+  KV cache     (B, T, Hkv, hd)     — pinned at the jit boundary (sharding.py)
+
+GQA is computed by REPEATING k/v up to the full query-head count before the
+score einsum: on TPU this keeps every attention tensor sharded on one clean
+head axis (reshaping q to (Hkv, G) would split the sharded dim — kv=8 over
+model=16 cannot divide, and GSPMD falls back to full rematerialization).
+The repeat is free under remat and the expanded k/v are (B,S,Hq,hd)/TP-sharded.
+
+Scores/softmax accumulate in fp32; everything else runs in bf16.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.axes import constrain
+from repro.utils import scan as uscan
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.hq_eff, cfg.hkv_eff   # padded for TP divisibility
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(k1, (d, hq, hd), fan_in=d),
+        "wk": L.dense_init(k2, (d, hkv, hd), fan_in=d),
+        "wv": L.dense_init(k3, (d, hkv, hd), fan_in=d),
+        "wo": L.dense_init(k4, (hq, hd, d), fan_in=cfg.n_heads * hd),
+    }
+
+
+def _head_mask(cfg: ModelConfig, out: jax.Array) -> jax.Array:
+    """Zero the padded heads' outputs: pad heads contribute nothing and
+    receive no gradient — model capacity stays exactly the assigned config."""
+    if cfg.hq_eff == cfg.n_heads:
+        return out
+    mask = (jnp.arange(cfg.hq_eff) < cfg.n_heads).astype(out.dtype)
+    return out * mask[None, None, :, None]
+
+
+def _qkv(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    """Projections + RoPE + logical sharding pins.  positions: (S,) int32."""
+    xd = x.astype(L.ACT_DTYPE)
+    q = jnp.einsum("bsd,dhk->bshk", xd, params["wq"].astype(xd.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xd, params["wk"].astype(xd.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xd, params["wv"].astype(xd.dtype))
+    cos, sin = L.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = L.apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+    k = L.apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, T, Hkv, hd) -> (B, T, Hq, hd) by repeating each kv head G times."""
+    hkv = k.shape[2]
+    if hkv == n_heads:
+        return k
+    rep = jnp.repeat(k, n_heads // hkv, axis=2)
+    return constrain(rep, "batch", "seq", "heads", "head_dim")
+
+
+def _sdpa(
+    q: jax.Array,        # (B, S, H, hd)
+    k: jax.Array,        # (B, T, H, hd) — already GQA-expanded
+    v: jax.Array,        # (B, T, H, hd)
+    mask: jax.Array,     # (S, T) or (B, S, T) bool — True = attend
+) -> jax.Array:
+    hd = q.shape[-1]
+    scores = jnp.einsum("bshk,bthk->bhst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    m = mask[None, None] if mask.ndim == 2 else mask[:, None]
+    scores = jnp.where(m, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthk->bshk", probs, v)
+
+
+def causal_attention(
+    q: jax.Array,   # (B, S, Hq, hd)
+    k: jax.Array,   # (B, S, Hkv, hd)
+    v: jax.Array,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Causal self-attention, scanned over query chunks so the (cq, S) score
+    block — not (S, S) — is the peak intermediate.  O(S^2) FLOPs, O(S*cq) mem."""
+    b, s, hq, hd = q.shape
+    k = _expand_kv(k, hq)
+    v = _expand_kv(v, hq)
+
+    if s <= chunk:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        return _sdpa(q, k, v, mask)
+
+    assert s % chunk == 0, f"seq {s} must divide chunk {chunk}"
+    nc = s // chunk
+    qc = jnp.moveaxis(q.reshape(b, nc, chunk, hq, hd), 1, 0)
+    kv_pos = jnp.arange(s, dtype=jnp.int32)
+
+    def step(_, inp):
+        qi, ci = inp
+        q_pos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        mask = q_pos[:, None] >= kv_pos[None, :]
+        return None, _sdpa(qi, k, v, mask)
+
+    _, outs = uscan.scan(step, None, (qc, jnp.arange(nc, dtype=jnp.int32)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, hq, hd)
+
+
+def attention_block(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,          # (B, S, d)
+    positions: jax.Array,  # (S,) int32
+    chunk: int = 1024,
+) -> jax.Array:
+    """Full self-attention sublayer (projections + RoPE + causal attention)."""
+    q, k, v = _qkv(params, cfg, x, positions)
+    out = _head_mask(cfg, causal_attention(q, k, v, chunk=chunk))
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(out.dtype))
+
+
+# ---------------------------------------------------------------- decode ----
+
+
+def prefill_cache(
+    params: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array, cache_len: int
+) -> tuple[jax.Array, dict]:
+    """Like attention_block but also materializes the KV cache (B, T, Hkv, hd)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, cfg, x, positions)
+    out = _head_mask(cfg, causal_attention(q, k, v, chunk=min(cfg.policy.attn_chunk, s)))
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(out.dtype))
+
+    kc = jnp.zeros((b, cache_len, cfg.hkv_eff, cfg.head_dim), L.ACT_DTYPE)
+    vc = jnp.zeros_like(kc)
+    kc = lax.dynamic_update_slice(kc, k.astype(L.ACT_DTYPE), (0, 0, 0, 0))
+    vc = lax.dynamic_update_slice(vc, v.astype(L.ACT_DTYPE), (0, 0, 0, 0))
+    return out, {"k": kc, "v": vc}
+
+
+def _expand_kv_decode(k: jax.Array, n_heads: int) -> jax.Array:
+    """GQA expand on the cache layout: follows the cache's own sharding
+    (kv-heads OR head_dim) instead of forcing the train-time heads layout."""
+    hkv = k.shape[2]
+    rep = k if hkv == n_heads else jnp.repeat(k, n_heads // hkv, axis=2)
+    return constrain(rep, "batch", "seq", "dec_heads", "dec_hd")
+
+
+def decode_attention(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,        # (B, 1, d)
+    cache: dict,         # {"k","v"}: (B, T, Hkv, hd)
+    pos: jax.Array,      # () int32 — write/attend position (tokens < pos+1 valid)
+) -> tuple[jax.Array, dict]:
+    """One-token decode: write k/v at `pos`, attend over positions <= pos."""
+    t = cache["k"].shape[1]
+    q, k, v = _qkv(params, cfg, x, pos[None])
+    q = constrain(q, "batch", "seq", "dec_heads", "dec_hd")
+
+    kc = lax.dynamic_update_slice(cache["k"], k.astype(L.ACT_DTYPE), (0, pos, 0, 0))
+    vc = lax.dynamic_update_slice(cache["v"], v.astype(L.ACT_DTYPE), (0, pos, 0, 0))
+
+    ke = _expand_kv_decode(kc, cfg.hq_eff)
+    ve = _expand_kv_decode(vc, cfg.hq_eff)
+    mask = (jnp.arange(t, dtype=jnp.int32) <= pos)[None, :]       # (1, T)
+    out = _head_mask(cfg, _sdpa(q, ke, ve, mask))
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(out.dtype))
+    return out, {"k": kc, "v": vc}
+
+
+def decode_attention_retrieved(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,            # (B, 1, d)
+    cache: dict,             # full-length cache (B, T, Hkv, hd)
+    pos: jax.Array,          # () int32
+    retrieved: jax.Array,    # (B, m) int32 — positions from active search
+    retrieved_ok: jax.Array,  # (B, m) bool
+    local_window: int,
+) -> tuple[jax.Array, dict]:
+    """Sub-quadratic decode: attend over {local window} U {retrieved positions}
+    instead of the whole cache.  Per-step cost O(w + m) — N-independence of the
+    paper's search carried into attention (DESIGN.md §5)."""
+    b = x.shape[0]
+    t = cache["k"].shape[1]
+    q, k, v = _qkv(params, cfg, x, pos[None])
+
+    kc = lax.dynamic_update_slice(cache["k"], k.astype(L.ACT_DTYPE), (0, pos, 0, 0))
+    vc = lax.dynamic_update_slice(cache["v"], v.astype(L.ACT_DTYPE), (0, pos, 0, 0))
+
+    # gather the attended positions: local window (w) + retrieved (m)
+    w = local_window
+    local = pos - w + 1 + jnp.arange(w, dtype=jnp.int32)          # (w,), may be <0
+    local_ok = local >= 0
+    local = jnp.clip(local, 0, t - 1)
+    idx = jnp.concatenate(
+        [jnp.broadcast_to(local, (b, w)), jnp.clip(retrieved, 0, t - 1)], axis=1
+    )                                                              # (B, w+m)
+    ok = jnp.concatenate(
+        [
+            jnp.broadcast_to(local_ok, (b, w)),
+            # retrieved entries inside the local window would be double
+            # counted by the softmax — mask them out
+            retrieved_ok & (retrieved <= pos) & (retrieved < pos - w + 1),
+        ],
+        axis=1,
+    )
+    kg = jnp.take_along_axis(kc, idx[:, :, None, None], axis=1)   # (B, w+m, Hkv, hd)
+    vg = jnp.take_along_axis(vc, idx[:, :, None, None], axis=1)
+
+    ke = _expand_kv_decode(kg, cfg.hq_eff)
+    ve = _expand_kv_decode(vg, cfg.hq_eff)
+    out = _head_mask(cfg, _sdpa(q, ke, ve, ok[:, None, :]))
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(out.dtype))
+    return out, {"k": kc, "v": vc}

@@ -1,0 +1,76 @@
+"""Building blocks shared by every architecture: RMSNorm, RoPE, SwiGLU, inits.
+
+Params are plain nested dicts of jax.Arrays (fp32 storage); compute casts to
+bf16 (activations) with fp32 for norms/softmax accumulations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ACT_DTYPE = jnp.bfloat16
+
+
+def dense_init(key, shape, fan_in=None, scale=1.0):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = scale / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(jnp.float32)
+
+
+def embed_init(key, shape):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * 0.02).astype(jnp.float32)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) int32 -> cos/sin (..., head_dim//2) float32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., n_heads, head_dim); cos/sin broadcastable (..., 1, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array) -> jax.Array:
+    """SwiGLU MLP: (..., d) with wi/wg (d, ff), wo (ff, d)."""
+    h = jnp.einsum("...d,df->...f", x, wg.astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, wi.astype(x.dtype)).astype(jnp.float32))
+    return jnp.einsum("...f,fd->...d", (g.astype(x.dtype) * h), wo.astype(x.dtype))
+
+
+def init_mlp(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, (d_model, d_ff)),
+        "wg": dense_init(k2, (d_model, d_ff)),
+        "wo": dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def softmax_cross_entropy(
+    logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None
+) -> jax.Array:
+    """Mean token NLL.  logits (..., V) any float dtype; labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

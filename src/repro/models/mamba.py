@@ -1,0 +1,206 @@
+"""Mamba (selective SSM) block — chunked selective scan, TPU-friendly.
+
+The CUDA reference fuses a per-timestep recurrence into one kernel.  On TPU we
+restructure (DESIGN.md §2 hardware-adaptation): an outer lax.scan over chunks
+carries the (B, d_inner, d_state) SSM state, and WITHIN a chunk the linear
+recurrence h_t = a_t h_{t-1} + b_t is solved with an associative scan — so the
+(B, Q, d_inner, d_state) intermediate exists only per chunk, and the MXU-sized
+matmuls (in/out projections) dominate.
+
+Recurrence math (Mamba-1):
+  a_t = exp(dt_t * A)          A = -exp(A_log)  (diagonal, negative)
+  b_t = dt_t * B_t x_t
+  y_t = C_t . h_t + D * x_t ;  out = y * silu(z)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import MambaConfig, ModelConfig
+from repro.parallel.axes import constrain
+from repro.utils import scan as uscan
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return cfg.mamba.dt_rank or -(-cfg.d_model // 16)
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    mc: MambaConfig = cfg.mamba
+    d = cfg.d_model
+    din = mc.expand * d
+    dtr = _dt_rank(cfg)
+    keys = jax.random.split(key, 6)
+    # dt bias: inverse-softplus of uniform [1e-3, 1e-1] (standard Mamba init)
+    u = jax.random.uniform(keys[4], (din,), minval=1e-3, maxval=1e-1)
+    dt_bias = jnp.log(jnp.expm1(u)).astype(jnp.float32)
+    a = jnp.broadcast_to(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (din, mc.d_state))
+    return {
+        "in_proj": L.dense_init(keys[0], (d, 2 * din), fan_in=d),
+        "conv_w": (jax.random.normal(keys[1], (mc.d_conv, din)) * 0.1).astype(jnp.float32),
+        "conv_b": jnp.zeros((din,), jnp.float32),
+        "x_proj": L.dense_init(keys[2], (din, dtr + 2 * mc.d_state), fan_in=din),
+        "dt_proj": L.dense_init(keys[3], (dtr, din), fan_in=dtr),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(a),
+        "D": jnp.ones((din,), jnp.float32),
+        "out_proj": L.dense_init(keys[5], (din, d), fan_in=din),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x (B, S, din), w (dconv, din)."""
+    dconv, din = w.shape
+    out = lax.conv_general_dilated(
+        x,
+        w[:, None, :].astype(x.dtype),
+        window_strides=(1,),
+        padding=[(dconv - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=din,
+    )
+    return out + b.astype(x.dtype)
+
+
+def _chunk_scan(a: jax.Array, bx: jax.Array, h0: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Solve h_t = a_t h_{t-1} + bx_t within one chunk, given h0.
+
+    a, bx: (B, Q, din, ds) fp32;  h0: (B, din, ds).  Returns (h (B,Q,din,ds),
+    h_last).  First-order linear recurrences are associative under
+    (a1,b1)*(a2,b2) = (a1*a2, a2*b1 + b2).
+    """
+    bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        al, bl = lhs
+        ar, br = rhs
+        return al * ar, ar * bl + br
+
+    _, h = lax.associative_scan(combine, (a, bx), axis=1)
+    return h, h[:, -1]
+
+
+def mamba_scan(
+    params: dict, cfg: ModelConfig, x_in: jax.Array, h0: jax.Array, chunk: int
+) -> tuple[jax.Array, jax.Array]:
+    """x_in (B, S, din) post-conv activations -> (y (B, S, din), h_last)."""
+    mc = cfg.mamba
+    b, s, din = x_in.shape
+    dtr = _dt_rank(cfg)
+    xf = x_in.astype(jnp.float32)
+
+    proj = jnp.einsum("bsd,de->bse", x_in, params["x_proj"].astype(x_in.dtype))
+    dt_in, b_ssm, c_ssm = jnp.split(
+        proj.astype(jnp.float32), [dtr, dtr + mc.d_state], axis=-1
+    )
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_in, params["dt_proj"].astype(jnp.float32))
+        + params["dt_bias"]
+    )                                                              # (B, S, din)
+    a_mat = -jnp.exp(params["A_log"])                              # (din, ds)
+
+    q = min(chunk, s)
+    nc = -(-s // q)
+    s_pad = nc * q
+    if s_pad != s:
+        # identity padding: dt=0 -> a=exp(0)=1, b*x=0 (state passes through)
+        pad = ((0, 0), (0, s_pad - s), (0, 0))
+        dt = jnp.pad(dt, pad)
+        xf = jnp.pad(xf, pad)
+        b_ssm = jnp.pad(b_ssm, pad)
+        c_ssm = jnp.pad(c_ssm, pad)
+    dt_c = dt.reshape(b, nc, q, din)
+    xb_c = (dt * xf).reshape(b, nc, q, din)
+    bs_c = b_ssm.reshape(b, nc, q, mc.d_state)
+    cs_c = c_ssm.reshape(b, nc, q, mc.d_state)
+
+    def step(h, inp):
+        dt_i, xb_i, b_i, c_i = inp                                  # (B, Q, ...)
+        a = jnp.exp(dt_i[..., None] * a_mat[None, None])            # (B, Q, din, ds)
+        bx = xb_i[..., None] * b_i[:, :, None, :]                   # (B, Q, din, ds)
+        h_all, h_last = _chunk_scan(a, bx, h)
+        y = jnp.einsum("bqds,bqs->bqd", h_all, c_i)                 # (B, Q, din)
+        return h_last, y
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (dt_c, xb_c, bs_c, cs_c))
+    h_last, ys = uscan.scan(step, h0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s_pad, din)[:, :s]
+    y = y + xf[:, :s] * params["D"]
+    return y.astype(x_in.dtype), h_last
+
+
+def mamba_prefill(
+    params: dict, cfg: ModelConfig, x: jax.Array
+) -> tuple[jax.Array, dict]:
+    """Full Mamba sublayer.  x (B, S, d) -> ((B, S, d), decode cache)."""
+    mc = cfg.mamba
+    b, s, _ = x.shape
+    din = mc.expand * cfg.d_model
+    xd = x.astype(L.ACT_DTYPE)
+    xz = jnp.einsum("bsd,de->bse", xd, params["in_proj"].astype(xd.dtype))
+    xz = constrain(xz, "batch", "seq", "inner")
+    x_raw, z = jnp.split(xz, 2, axis=-1)
+    x_in = _causal_conv(x_raw, params["conv_w"], params["conv_b"])
+    x_in = jax.nn.silu(x_in.astype(jnp.float32)).astype(xd.dtype)
+    h0 = jnp.zeros((b, din, mc.d_state), jnp.float32)
+    y, h_last = mamba_scan(params, cfg, x_in, h0, mc.chunk)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(xd.dtype)
+    y = constrain(y, "batch", "seq", "inner")
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(xd.dtype))
+    cache = {"conv": x_raw[:, s - (mc.d_conv - 1) :, :].astype(L.ACT_DTYPE), "ssm": h_last}
+    return out, cache
+
+
+def mamba_block(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Training form (no cache)."""
+    out, _ = mamba_prefill(params, cfg, x)
+    return out
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> dict:
+    mc = cfg.mamba
+    din = mc.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, mc.d_conv - 1, din), L.ACT_DTYPE),
+        "ssm": jnp.zeros((batch, din, mc.d_state), jnp.float32),
+    }
+
+
+def mamba_decode_step(
+    params: dict, cfg: ModelConfig, x: jax.Array, cache: dict
+) -> tuple[jax.Array, dict]:
+    """One-token decode.  x (B, 1, d); O(1) state update (no KV growth)."""
+    mc = cfg.mamba
+    xd = x.astype(L.ACT_DTYPE)
+    xz = jnp.einsum("bsd,de->bse", xd, params["in_proj"].astype(xd.dtype))
+    x_in, z = jnp.split(xz, 2, axis=-1)                             # (B, 1, din)
+
+    # conv over [cache, x]
+    window = jnp.concatenate([cache["conv"], x_in], axis=1)         # (B, dconv, din)
+    w = params["conv_w"].astype(xd.dtype)                           # (dconv, din)
+    xc = jnp.sum(window * w[None], axis=1, keepdims=True) + params["conv_b"].astype(xd.dtype)
+    # round through bf16 exactly like the prefill path, then lift to fp32
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(L.ACT_DTYPE)
+    xc = xc.astype(jnp.float32)
+
+    dtr = _dt_rank(cfg)
+    proj = jnp.einsum("bsd,de->bse", xc.astype(xd.dtype), params["x_proj"].astype(xd.dtype))
+    dt_in, b_ssm, c_ssm = jnp.split(
+        proj.astype(jnp.float32), [dtr, dtr + mc.d_state], axis=-1
+    )
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_in, params["dt_proj"].astype(jnp.float32))
+        + params["dt_bias"]
+    )[:, 0]                                                         # (B, din)
+    a_mat = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt[..., None] * a_mat[None])                        # (B, din, ds)
+    bx = (dt * xc[:, 0])[..., None] * b_ssm[:, 0, None, :]          # (B, din, ds)
+    h = a * cache["ssm"] + bx
+    y = jnp.einsum("bds,bs->bd", h, c_ssm[:, 0]) + xc[:, 0] * params["D"]
+    y = (y[:, None].astype(xd.dtype)) * jax.nn.silu(z.astype(jnp.float32)).astype(xd.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(xd.dtype))
+    return out, {"conv": window[:, 1:], "ssm": h}

@@ -1,0 +1,330 @@
+"""Decoder LM composition serving all 10 assigned architectures.
+
+Layers are stored STACKED BY PERIOD POSITION: `params["blocks"][p]` holds the
+params of period-position p with a leading (n_repeat,) axis, so homogeneous
+stacks run under ONE lax.scan (fast compiles at 40+ layers) and heterogeneous
+patterns (jamba 1:7 attn:mamba, xlstm m/sLSTM mix) scan over the repeating
+period.  policy.scan_layers=False unrolls instead (used to cross-check
+cost_analysis FLOP accounting in the dry-run).
+
+Modes: forward() for training, prefill() -> cache, decode_step() for serving,
+decode_step_retrieved() for the active-search long-context path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import mamba as mam
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xl
+from repro.models.config import ModelConfig
+from repro.parallel.axes import constrain
+
+Params = dict[str, Any]
+
+
+# ------------------------------------------------------------------- init ---
+
+
+def _init_layer(key, cfg: ModelConfig, p: int) -> dict:
+    kind = cfg.pattern[p]
+    k1, k2, k3 = jax.random.split(key, 3)
+    layer: dict = {"norm1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if kind == "attn":
+        layer["core"] = attn.init_attention(k1, cfg)
+    elif kind == "mamba":
+        layer["core"] = mam.init_mamba(k1, cfg)
+    elif kind == "mlstm":
+        layer["core"] = xl.init_mlstm(k1, cfg)
+    elif kind == "slstm":
+        layer["core"] = xl.init_slstm(k1, cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.is_moe_layer(p):
+        layer["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        layer["ffn"] = moe_lib.init_moe(k2, cfg)
+    elif cfg.d_ff > 0 and kind in ("attn", "mamba"):
+        layer["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        layer["ffn"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff)
+    return layer
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    blocks = []
+    for p in range(cfg.block_period):
+        stack = [
+            _init_layer(keys[r * cfg.block_period + p], cfg, p)
+            for r in range(cfg.n_repeat)
+        ]
+        blocks.append(jax.tree.map(lambda *a: jnp.stack(a), *stack))
+    params: Params = {
+        "embed": L.embed_init(keys[-1], (cfg.vocab_eff, cfg.d_model)),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[-2], (cfg.d_model, cfg.vocab_eff))
+    return params
+
+
+def _mask_pad_vocab(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
+    """Padded vocab rows can never win argmax / receive CE mass."""
+    if cfg.vocab_eff == cfg.vocab_size:
+        return logits
+    col = jnp.arange(cfg.vocab_eff) < cfg.vocab_size
+    return jnp.where(col, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+# ---------------------------------------------------------------- forward ---
+
+
+def _apply_layer_train(layer, cfg: ModelConfig, p: int, x, positions):
+    kind = cfg.pattern[p]
+    h = L.rms_norm(x, layer["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        core = attn.attention_block(
+            layer["core"], cfg, h, positions, chunk=cfg.policy.attn_chunk
+        )
+    elif kind == "mamba":
+        core = mam.mamba_block(layer["core"], cfg, h)
+    elif kind == "mlstm":
+        core = xl.mlstm_block(layer["core"], cfg, h)
+    else:
+        core = xl.slstm_block(layer["core"], cfg, h)
+    x = constrain(x + core, "batch", "seq", "embed")
+    aux = jnp.float32(0.0)
+    if "ffn" in layer:
+        h2 = L.rms_norm(x, layer["norm2"], cfg.norm_eps)
+        if cfg.is_moe_layer(p):
+            y, aux = moe_lib.moe_block(layer["ffn"], cfg, h2)
+        else:
+            f = layer["ffn"]
+            y = L.swiglu(h2, f["wi"], f["wg"], f["wo"])
+        x = constrain(x + y, "batch", "seq", "embed")
+    return x, aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.policy.remat == "none":
+        return fn
+    if cfg.policy.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def embed_inputs(params: Params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Token embedding + modality frontend stubs (DESIGN.md §6)."""
+    if cfg.frontend == "audio":
+        # EnCodec frame embeddings arrive precomputed: (B, S, d)
+        return constrain(
+            batch["frame_embeds"].astype(L.ACT_DTYPE), "batch", "seq", "embed"
+        )
+    x = params["embed"][batch["tokens"]].astype(L.ACT_DTYPE)
+    if cfg.frontend == "vision" and "vision_embeds" in batch:
+        # patch embeddings occupy the first n_frontend_tokens positions
+        ve = batch["vision_embeds"].astype(L.ACT_DTYPE)
+        x = lax.dynamic_update_slice(x, ve, (0, 0, 0))
+    return constrain(x, "batch", "seq", "embed")
+
+
+def forward(params: Params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, jax.Array]:
+    """Training forward: batch {tokens (B,S), ...} -> (logits (B,S,V), aux)."""
+    x = embed_inputs(params, cfg, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, block_slice):
+        aux = jnp.float32(0.0)
+        for p in range(cfg.block_period):
+            x, a = _apply_layer_train(block_slice[p], cfg, p, x, positions)
+            aux = aux + a
+        return x, aux
+
+    body = _remat(body, cfg)
+
+    if cfg.policy.scan_layers and cfg.n_repeat > 1:
+        x, auxs = lax.scan(lambda c, b: body(c, b), x, params["blocks"])
+        aux = jnp.sum(auxs)
+    else:
+        aux = jnp.float32(0.0)
+        for r in range(cfg.n_repeat):
+            blk = [jax.tree.map(lambda a: a[r], params["blocks"][p]) for p in range(cfg.block_period)]
+            x, a = body(x, blk)
+            aux = aux + a
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = _mask_pad_vocab(cfg, jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype)))
+    return constrain(logits, "batch", "seq", "vocab"), aux
+
+
+def loss_fn(
+    params: Params, cfg: ModelConfig, batch: dict, aux_weight: float = 0.01
+) -> tuple[jax.Array, dict]:
+    logits, aux = forward(params, cfg, batch)
+    mask = batch.get("mask")
+    nll = L.softmax_cross_entropy(logits, batch["labels"], mask)
+    loss = nll + aux_weight * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------- serving ---
+
+
+def _apply_layer_prefill(layer, cfg, p, x, positions, cache_len):
+    kind = cfg.pattern[p]
+    h = L.rms_norm(x, layer["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        core, cache = attn.prefill_cache(layer["core"], cfg, h, positions, cache_len)
+    elif kind == "mamba":
+        core, cache = mam.mamba_prefill(layer["core"], cfg, h)
+    elif kind == "mlstm":
+        core, cache = xl.mlstm_prefill(layer["core"], cfg, h)
+    else:
+        core, cache = xl.slstm_prefill(layer["core"], cfg, h)
+    x = constrain(x + core, "batch", "seq", "embed")
+    if "ffn" in layer:
+        h2 = L.rms_norm(x, layer["norm2"], cfg.norm_eps)
+        if cfg.is_moe_layer(p):
+            y, _ = moe_lib.moe_block(layer["ffn"], cfg, h2)
+        else:
+            f = layer["ffn"]
+            y = L.swiglu(h2, f["wi"], f["wg"], f["wo"])
+        x = constrain(x + y, "batch", "seq", "embed")
+    return x, cache
+
+
+def prefill(
+    params: Params, cfg: ModelConfig, batch: dict, cache_len: int = 0
+) -> tuple[jax.Array, list, jax.Array]:
+    """Prefill: -> (last-position logits (B, V), caches, last hidden (B, d)).
+
+    caches: list over period positions; leaves have leading (n_repeat,) axis
+    (matching the stacked param layout)."""
+    x = embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    cache_len = cache_len or s
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, block_slice):
+        caches = []
+        for p in range(cfg.block_period):
+            x, c = _apply_layer_prefill(block_slice[p], cfg, p, x, positions, cache_len)
+            caches.append(c)
+        return x, caches
+
+    body = _remat(body, cfg)
+
+    if cfg.policy.scan_layers and cfg.n_repeat > 1:
+        x, caches = lax.scan(lambda c, blk: body(c, blk), x, params["blocks"])
+    else:
+        all_caches = []
+        for r in range(cfg.n_repeat):
+            blk = [jax.tree.map(lambda a: a[r], params["blocks"][p]) for p in range(cfg.block_period)]
+            x, cs = body(x, blk)
+            all_caches.append(cs)
+        caches = jax.tree.map(lambda *a: jnp.stack(a), *all_caches)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = x[:, -1, :]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = _mask_pad_vocab(cfg, jnp.einsum("bd,dv->bv", last, head.astype(x.dtype)))
+    return constrain(logits, "batch", "vocab"), caches, last
+
+
+def _apply_layer_decode(layer, cfg, p, x, cache, pos, retrieved=None):
+    kind = cfg.pattern[p]
+    h = L.rms_norm(x, layer["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        if retrieved is not None:
+            core, cache = attn.decode_attention_retrieved(
+                layer["core"], cfg, h, cache, pos, retrieved[0], retrieved[1], retrieved[2]
+            )
+        else:
+            core, cache = attn.decode_attention(layer["core"], cfg, h, cache, pos)
+    elif kind == "mamba":
+        core, cache = mam.mamba_decode_step(layer["core"], cfg, h, cache)
+    elif kind == "mlstm":
+        core, cache = xl.mlstm_decode_step(layer["core"], cfg, h, cache)
+    else:
+        core, cache = xl.slstm_decode_step(layer["core"], cfg, h, cache)
+    x = constrain(x + core, "batch", "seq", "embed")
+    if "ffn" in layer:
+        h2 = L.rms_norm(x, layer["norm2"], cfg.norm_eps)
+        if cfg.is_moe_layer(p):
+            y, _ = moe_lib.moe_block(layer["ffn"], cfg, h2)
+        else:
+            f = layer["ffn"]
+            y = L.swiglu(h2, f["wi"], f["wg"], f["wo"])
+        x = constrain(x + y, "batch", "seq", "embed")
+    return x, cache
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    caches: list,
+    token: jax.Array,   # (B,) int32
+    pos: jax.Array,     # () int32
+    retrieved: tuple | None = None,  # (positions (B,m), valid (B,m), local_window)
+) -> tuple[jax.Array, list, jax.Array]:
+    """One decode step -> (logits (B, V), caches, hidden (B, d))."""
+    x = params["embed"][token][:, None, :].astype(L.ACT_DTYPE)
+
+    def body(x, inp):
+        block_slice, cache_slice = inp
+        new_caches = []
+        for p in range(cfg.block_period):
+            x, c = _apply_layer_decode(
+                block_slice[p], cfg, p, x, cache_slice[p], pos, retrieved
+            )
+            new_caches.append(c)
+        return x, new_caches
+
+    if cfg.policy.scan_layers and cfg.n_repeat > 1:
+        x, caches = lax.scan(body, x, (params["blocks"], caches))
+    else:
+        all_caches = []
+        for r in range(cfg.n_repeat):
+            blk = [jax.tree.map(lambda a: a[r], params["blocks"][p]) for p in range(cfg.block_period)]
+            cs = [jax.tree.map(lambda a: a[r], caches[p]) for p in range(cfg.block_period)]
+            x, ncs = body(x, (blk, cs))
+            all_caches.append(ncs)
+        caches = jax.tree.map(lambda *a: jnp.stack(a), *all_caches)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    hidden = x[:, 0, :]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = _mask_pad_vocab(cfg, jnp.einsum("bd,dv->bv", hidden, head.astype(x.dtype)))
+    return constrain(logits, "batch", "vocab"), caches, hidden
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int) -> list:
+    """Empty decode caches with the same structure prefill() produces."""
+    caches = []
+    for p in range(cfg.block_period):
+        kind = cfg.pattern[p]
+        if kind == "attn":
+            c = {
+                "k": jnp.zeros((batch, cache_len, cfg.hkv_eff, cfg.head_dim), L.ACT_DTYPE),
+                "v": jnp.zeros((batch, cache_len, cfg.hkv_eff, cfg.head_dim), L.ACT_DTYPE),
+            }
+        elif kind == "mamba":
+            c = mam.init_mamba_cache(cfg, batch)
+        elif kind == "mlstm":
+            c = xl.init_mlstm_cache(cfg, batch)
+        else:
+            c = xl.init_slstm_cache(cfg, batch)
+        caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_repeat,) + a.shape), c))
+    return caches

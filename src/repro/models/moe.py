@@ -1,0 +1,99 @@
+"""Mixture-of-Experts with GShard-style grouped one-hot dispatch.
+
+Routing is standard softmax top-k (NOT active search: with <=60 experts a
+grid index is strictly slower than a dense arg-top-k — DESIGN.md §5).
+
+Dispatch: tokens are split into groups of `group_size`; capacity per group is
+C = ceil(g * top_k / E * capacity_factor).  The dispatch/combine tensors are
+(G, g, E, C) so their size is LINEAR in tokens (g, not T, multiplies E*C).
+Experts are sharded over the 'model' axis (EP); `n_padded` dummy experts make
+E divisible by the axis (router never selects them: their logits are -inf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, MoEConfig
+from repro.parallel.axes import constrain
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    mo = cfg.moe
+    d, e, de = cfg.d_model, mo.n_total, mo.d_expert
+    keys = jax.random.split(key, 5)
+    params = {
+        "router": L.dense_init(keys[0], (d, e), fan_in=d),
+        "wi": L.dense_init(keys[1], (e, d, de), fan_in=d),
+        "wg": L.dense_init(keys[2], (e, d, de), fan_in=d),
+        "wo": L.dense_init(keys[3], (e, de, d), fan_in=de),
+    }
+    if mo.shared_d_ff:
+        params["shared"] = L.init_mlp(keys[4], d, mo.shared_d_ff)
+    return params
+
+
+def moe_block(params: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (y (B, S, d), aux_loss ()).  Token order preserved."""
+    mo: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    g = min(mo.group_size, t)
+    ng = -(-t // g)
+    t_pad = ng * g
+    e, k = mo.n_total, mo.top_k
+    cap = max(4, int(round(g * k / max(mo.n_experts, 1) * mo.capacity_factor)))
+
+    xt = x.reshape(t, d)
+    if t_pad != t:
+        xt = jnp.pad(xt, ((0, t_pad - t), (0, 0)))
+    xt = xt.reshape(ng, g, d).astype(L.ACT_DTYPE)
+    logits = jnp.einsum("Ggd,de->Gge", xt, params["router"].astype(xt.dtype))
+    logits = logits.astype(jnp.float32)
+    if mo.n_padded:
+        pad_mask = jnp.arange(e) >= mo.n_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)                        # (G, g, E)
+
+    top_w, top_i = jax.lax.top_k(probs, k)                         # (G, g, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))                              # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=2), axis=(0, 1)
+    )
+    aux = jnp.sum(me * ce) * (mo.n_experts**2) / max(k, 1)
+
+    # GShard positions: slot-major cumsum so first choices win capacity races
+    mask = jax.nn.one_hot(top_i, e, dtype=jnp.float32)             # (G, g, k, E)
+    mask_sm = jnp.moveaxis(mask, 2, 1).reshape(ng, k * g, e)       # slot-major
+    ranks_sm = jnp.cumsum(mask_sm, axis=1) - mask_sm               # rank BEFORE self
+    ranks = jnp.moveaxis(ranks_sm.reshape(ng, k, g, e), 1, 2)      # (G, g, k, E)
+    rank_of = jnp.sum(ranks * mask, axis=-1)                       # (G, g, k)
+    keep = rank_of < cap
+
+    # dispatch/combine: merge the k slots (disjoint experts per token)
+    rank_i = jnp.where(keep, rank_of, cap).astype(jnp.int32)       # cap -> dropped
+    oh_cap = jax.nn.one_hot(rank_i, cap, dtype=jnp.float32)        # (G, g, k, C)
+    dispatch = jnp.einsum("GgkE,GgkC->GgEC", mask, oh_cap)         # 0/1
+    combine = jnp.einsum("GgkE,GgkC,Ggk->GgEC", mask, oh_cap, top_w)
+
+    xe = jnp.einsum("GgEC,Ggd->GECd", dispatch.astype(xt.dtype), xt)
+    xe = constrain(xe, "batch", "experts", None, "embed")
+    hi = jnp.einsum("GECd,Edf->GECf", xe, params["wg"].astype(xt.dtype))
+    gi = jnp.einsum("GECd,Edf->GECf", xe, params["wi"].astype(xt.dtype))
+    act = jax.nn.silu(gi.astype(jnp.float32)).astype(xt.dtype) * hi
+    ye = jnp.einsum("GECf,Efd->GECd", act, params["wo"].astype(xt.dtype))
+    ye = constrain(ye, "batch", "experts", None, "embed")
+    y = jnp.einsum("GgEC,GECd->Ggd", combine.astype(xt.dtype), ye)
+    y = constrain(y, "batch", None, "embed")
+
+    if "shared" in params:
+        sh = params["shared"]
+        y = y + L.swiglu(xt, sh["wi"], sh["wg"], sh["wo"])
+
+    y = y.reshape(t_pad, d)[:t]
+    return y.reshape(b, s, d), aux

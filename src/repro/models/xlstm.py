@@ -1,0 +1,258 @@
+"""xLSTM blocks: mLSTM (chunkwise-parallel matrix memory) + sLSTM (scan).
+
+TPU adaptation notes (DESIGN.md §2/§5):
+ * mLSTM trains with the chunkwise-parallel linear-attention form: an outer
+   lax.scan carries the (B, nh, hd, hd) matrix memory across chunks; within a
+   chunk the decay-weighted attention runs as dense (Q, Q) matmuls on the MXU.
+ * Gating simplification vs the paper: input gate is sigmoid (GLA-style)
+   rather than exp-with-stabilizer — same compute/memory character, simpler
+   numerics; sLSTM keeps the paper's exp gating + m-stabilizer faithfully.
+ * sLSTM is inherently sequential (recurrent h-mixing); it runs as a
+   lax.scan over time — this is the arch's nature, not an implementation gap.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, XLSTMConfig
+from repro.parallel.axes import constrain
+from repro.utils import scan as uscan
+
+
+# ------------------------------------------------------------------ mLSTM ---
+
+
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    xc = cfg.xlstm
+    din = int(xc.proj_factor_mlstm * cfg.d_model)
+    nh = xc.n_heads
+    din -= din % nh
+    return din, nh, din // nh
+
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    din, nh, hd = _mlstm_dims(cfg)
+    keys = jax.random.split(key, 7)
+    return {
+        "up": L.dense_init(keys[0], (d, 2 * din), fan_in=d),
+        "wq": L.dense_init(keys[1], (din, nh, hd), fan_in=din),
+        "wk": L.dense_init(keys[2], (din, nh, hd), fan_in=din),
+        "wv": L.dense_init(keys[3], (din, nh, hd), fan_in=din),
+        "wif": L.dense_init(keys[4], (din, nh, 2), fan_in=din),
+        "fgate_bias": jnp.full((nh,), 3.0, jnp.float32),  # start remembering
+        "down": L.dense_init(keys[5], (din, d), fan_in=din),
+    }
+
+
+def _mlstm_gates(params, xm):
+    """xm (B, S, din) -> q, k, v (B, S, nh, hd) and log_f, i (B, S, nh) fp32."""
+    q = jnp.einsum("bsd,dhk->bshk", xm, params["wq"].astype(xm.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xm, params["wk"].astype(xm.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xm, params["wv"].astype(xm.dtype))
+    gates = jnp.einsum("bsd,dhg->bshg", xm, params["wif"].astype(xm.dtype))
+    gates = gates.astype(jnp.float32)
+    i = jax.nn.sigmoid(gates[..., 0])
+    log_f = jax.nn.log_sigmoid(gates[..., 1] + params["fgate_bias"])
+    return q, k, v, log_f, i
+
+
+def mlstm_block(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    out, _ = mlstm_prefill(params, cfg, x)
+    return out
+
+
+def mlstm_prefill(params: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, dict]:
+    """Training/prefill form.  x (B, S, d) -> ((B, S, d), decode cache)."""
+    xc: XLSTMConfig = cfg.xlstm
+    b, s, _ = x.shape
+    din, nh, hd = _mlstm_dims(cfg)
+    xd = x.astype(L.ACT_DTYPE)
+    xz = jnp.einsum("bsd,de->bse", xd, params["up"].astype(xd.dtype))
+    xz = constrain(xz, "batch", "seq", "inner")
+    xm, z = jnp.split(xz, 2, axis=-1)
+
+    q, k, v, log_f, i_gate = _mlstm_gates(params, xm)
+    scale = 1.0 / jnp.sqrt(hd)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    qc = min(xc.chunk, s)
+    nc = -(-s // qc)
+    s_pad = nc * qc
+    if s_pad != s:
+        # identity padding: log_f=0 (f=1), i=0 -> state passes through
+        padw = ((0, 0), (0, s_pad - s)) + ((0, 0),) * 2
+        qf = jnp.pad(qf, padw)
+        kf = jnp.pad(kf, padw)
+        vf = jnp.pad(vf, padw)
+        log_f = jnp.pad(log_f, padw[:3])
+        i_gate = jnp.pad(i_gate, padw[:3])
+
+    def reshape_c(a):
+        return jnp.moveaxis(a.reshape(b, nc, qc, *a.shape[2:]), 1, 0)
+
+    qs, ks, vs = reshape_c(qf), reshape_c(kf), reshape_c(vf)
+    lfs, igs = reshape_c(log_f), reshape_c(i_gate)
+
+    c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, nh, hd), jnp.float32)
+
+    def step(carry, inp):
+        c_prev, n_prev = carry
+        qi, ki, vi, lf, ig = inp                     # (B, Q, nh, ...)
+        clf = jnp.cumsum(lf, axis=1)                 # (B, Q, nh)
+        # intra-chunk: W[t, u] = exp(clf_t - clf_u) * i_u  for u <= t
+        rel = clf[:, :, None, :] - clf[:, None, :, :]          # (B, Q, Q, nh)
+        tri = jnp.tril(jnp.ones((qc, qc), bool))
+        w = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0) * ig[:, None, :, :]
+        scores = jnp.einsum("bthk,buhk->btuh", qi, ki) * w
+        y_intra = jnp.einsum("btuh,buhk->bthk", scores, vi)
+        n_intra = jnp.einsum("btuh,buhk->bthk", w, ki * jnp.ones_like(ki))
+        # inter-chunk
+        decay_t = jnp.exp(clf)                                   # (B, Q, nh)
+        y_inter = jnp.einsum("bthk,bhkl->bthl", qi * decay_t[..., None], c_prev)
+        n_inter = n_prev[:, None] * decay_t[..., None]
+        y = y_intra + y_inter
+        n_t = n_intra + n_inter
+        denom = jnp.abs(jnp.einsum("bthk,bthk->bth", qi, n_t))
+        h = y / jnp.maximum(denom, 1.0)[..., None]
+        # state update to end of chunk
+        tail = clf[:, -1:, :] - clf                              # (B, Q, nh) >= 0? no: clf_Q - clf_u
+        wk_tail = jnp.exp(tail) * ig                             # (B, Q, nh)
+        c_new = c_prev * jnp.exp(clf[:, -1])[..., None, None] + jnp.einsum(
+            "buhk,buhl,buh->bhkl", ki, vi, wk_tail
+        )
+        n_new = n_prev * jnp.exp(clf[:, -1])[..., None] + jnp.einsum(
+            "buhk,buh->bhk", ki, wk_tail
+        )
+        return (c_new, n_new), h
+
+    (c_f, n_f), hs = uscan.scan(step, (c0, n0), (qs, ks, vs, lfs, igs))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s_pad, din)[:, :s].astype(xd.dtype)
+    out = h * jax.nn.silu(z.astype(jnp.float32)).astype(xd.dtype)
+    out = jnp.einsum("bse,ed->bsd", out, params["down"].astype(xd.dtype))
+    return out, {"c": c_f, "n": n_f}
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    din, nh, hd = _mlstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+    }
+
+
+def mlstm_decode_step(params, cfg: ModelConfig, x: jax.Array, cache: dict):
+    """x (B, 1, d) -> (B, 1, d); O(1) state update."""
+    din, nh, hd = _mlstm_dims(cfg)
+    xd = x.astype(L.ACT_DTYPE)
+    xz = jnp.einsum("bsd,de->bse", xd, params["up"].astype(xd.dtype))
+    xz = constrain(xz, "batch", "seq", "inner")
+    xm, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, log_f, i_gate = _mlstm_gates(params, xm)
+    qf = q[:, 0].astype(jnp.float32) / jnp.sqrt(hd)             # (B, nh, hd)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    f = jnp.exp(log_f[:, 0])[..., None]                          # (B, nh, 1)
+    i = i_gate[:, 0][..., None]
+    c = cache["c"] * f[..., None] + i[..., None] * kf[..., :, None] * vf[..., None, :]
+    n = cache["n"] * f + i * kf
+    y = jnp.einsum("bhk,bhkl->bhl", qf, c)
+    denom = jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n))
+    h = (y / jnp.maximum(denom, 1.0)[..., None]).reshape(x.shape[0], 1, din)
+    out = h.astype(xd.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(xd.dtype)
+    return jnp.einsum("bse,ed->bsd", out, params["down"].astype(xd.dtype)), {
+        "c": c,
+        "n": n,
+    }
+
+
+# ------------------------------------------------------------------ sLSTM ---
+
+
+def _slstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    xc = cfg.xlstm
+    din = int(xc.proj_factor_slstm * cfg.d_model)
+    nh = xc.n_heads
+    din -= din % nh
+    return din, nh, din // nh
+
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    din, nh, hd = _slstm_dims(cfg)
+    keys = jax.random.split(key, 4)
+    return {
+        "up": L.dense_init(keys[0], (d, din), fan_in=d),
+        "wx": L.dense_init(keys[1], (din, 4, din), fan_in=din),
+        "r": L.dense_init(keys[2], (nh, hd, 4, hd), fan_in=hd),
+        "bias": jnp.zeros((4, din), jnp.float32),
+        "down": L.dense_init(keys[3], (din, d), fan_in=din),
+    }
+
+
+def _slstm_scan(params, cfg, gx, h0, c0, n0, m0):
+    """gx: (B, S, 4, din) fp32 input-side gate pre-activations."""
+    din, nh, hd = _slstm_dims(cfg)
+    b = gx.shape[0]
+    r = params["r"].astype(jnp.float32)
+
+    def step(carry, g_t):
+        h, c, n, m = carry                             # each (B, din)
+        hh = h.reshape(b, nh, hd)
+        rec = jnp.einsum("bhk,hkgl->bghl", hh, r).reshape(b, 4, din)
+        raw = g_t + rec + params["bias"]
+        z = jnp.tanh(raw[:, 0])
+        i_t = raw[:, 1]
+        f_t = raw[:, 2]
+        o = jax.nn.sigmoid(raw[:, 3])
+        m_new = jnp.maximum(f_t + m, i_t)              # exp-gate stabilizer
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_t + m - m_new)
+        c_new = f_p * c + i_p * z
+        n_new = f_p * n + i_p
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (h, c, n, m), hs = lax.scan(step, (h0, c0, n0, m0), jnp.moveaxis(gx, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), (h, c, n, m)
+
+
+def slstm_block(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    out, _ = slstm_prefill(params, cfg, x)
+    return out
+
+
+def slstm_prefill(params: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, dict]:
+    b, s, _ = x.shape
+    din, _, _ = _slstm_dims(cfg)
+    xd = x.astype(L.ACT_DTYPE)
+    xu = jnp.einsum("bsd,de->bse", xd, params["up"].astype(xd.dtype))
+    gx = jnp.einsum("bse,egf->bsgf", xu, params["wx"].astype(xd.dtype)).astype(jnp.float32)
+    zeros = jnp.zeros((b, din), jnp.float32)
+    hs, (h, c, n, m) = _slstm_scan(params, cfg, gx, zeros, zeros, zeros, zeros - 10.0)
+    out = jnp.einsum("bse,ed->bsd", hs.astype(xd.dtype), params["down"].astype(xd.dtype))
+    return out, {"h": h, "c": c, "n": n, "m": m}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    din, _, _ = _slstm_dims(cfg)
+    z = jnp.zeros((batch, din), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z - 10.0}
+
+
+def slstm_decode_step(params, cfg: ModelConfig, x: jax.Array, cache: dict):
+    xd = x.astype(L.ACT_DTYPE)
+    xu = jnp.einsum("bsd,de->bse", xd, params["up"].astype(xd.dtype))
+    gx = jnp.einsum("bse,egf->bsgf", xu, params["wx"].astype(xd.dtype)).astype(jnp.float32)
+    hs, (h, c, n, m) = _slstm_scan(
+        params, cfg, gx, cache["h"], cache["c"], cache["n"], cache["m"]
+    )
+    out = jnp.einsum("bse,ed->bsd", hs.astype(xd.dtype), params["down"].astype(xd.dtype))
+    return out, {"h": h, "c": c, "n": n, "m": m}

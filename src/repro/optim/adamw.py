@@ -1,0 +1,98 @@
+"""AdamW from scratch (no optax in this environment): fp32 moments, global-norm
+clip, cosine schedule with warmup, decoupled weight decay.
+
+Optimizer state is a pytree with the same structure/sharding as the params,
+so sharded (FSDP) params give ZeRO-1-sharded optimizer state for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def init(params: Any) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(mu=zeros, nu=jax.tree.map(jnp.copy, zeros), count=jnp.int32(0))
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (s - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _decay_mask(path: tuple) -> bool:
+    """Decay matrices only — not norms/biases/gates (standard practice)."""
+    name = getattr(path[-1], "key", None)
+    return name not in (
+        "norm1", "norm2", "final_norm", "bias", "conv_b",
+        "dt_bias", "fgate_bias", "A_log", "D",
+    )
+
+
+def update(
+    cfg: AdamWConfig, grads: Any, state: OptState, params: Any
+) -> tuple[Any, OptState, dict]:
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state.count + 1
+    lr = schedule(cfg, count)
+    b1, b2 = cfg.b1, cfg.b2
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    c = count.astype(jnp.float32)
+    mu_hat_scale = 1.0 / (1.0 - b1**c)
+    nu_hat_scale = 1.0 / (1.0 - b2**c)
+
+    def step(path, p, m, v):
+        upd = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + cfg.eps)
+        if _decay_mask(path):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map_with_path(step, params, mu, nu)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(mu, nu, count), metrics

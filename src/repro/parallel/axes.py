@@ -1,0 +1,122 @@
+"""Logical activation-axis rules -> with_sharding_constraint (MaxText-style).
+
+Model code annotates activations with LOGICAL axis names ("batch", "seq",
+"heads", "vocab", "experts", ...).  The launch layer installs a mapping from
+logical names to mesh axes for the duration of a trace; outside any mapping
+(unit tests, single-device smoke runs) constrain() is a no-op.
+
+Why this exists: with FSDP-sharded weights and no activation constraints,
+GSPMD's cheapest-local-op strategy is to REPLICATE the batch dim and
+partial-sum over the fsdp axis — measured 221 GiB/device temp on the
+minitron-8b train cell.  Pinning the batch axis at layer boundaries flips the
+partitioner to the intended all-gather-weights (ZeRO-3) schedule.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("axis_rules", default=None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: dict[str, Any]):
+    """rules: logical name -> mesh axis | tuple of axes | None."""
+    tok = _CTX.set((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def current_rules():
+    return _CTX.get()
+
+
+def _resolve(entry: Any, rules: dict) -> tuple:
+    """logical entry -> flat tuple of mesh axis names."""
+    if entry is None:
+        return ()
+    if isinstance(entry, (tuple, list)):
+        out: list = []
+        for e in entry:
+            out.extend(_resolve(e, rules))
+        return tuple(out)
+    mapped = rules.get(entry, None)
+    if mapped is None:
+        return ()
+    if isinstance(mapped, (tuple, list)):
+        return tuple(a for a in mapped if a is not None)
+    return (mapped,)
+
+
+def spec_for(shape: tuple, logical: tuple, mesh: Mesh, rules: dict) -> P:
+    """Divisibility-checked PartitionSpec for `shape` from logical names."""
+    entries = []
+    used: set = set()
+    for size, name in zip(shape, logical):
+        axes = []
+        prod = 1
+        for a in _resolve(name, rules):
+            if a in used or a not in mesh.axis_names:
+                continue
+            asz = mesh.shape[a]
+            if size % (prod * asz) == 0:
+                axes.append(a)
+                prod *= asz
+                used.add(a)
+        entries.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*entries)
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """Pin `x` to the sharding its logical axes imply.  No-op outside rules."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(logical) != x.ndim:
+        raise ValueError(f"constrain: {len(logical)} names for rank-{x.ndim} array")
+    spec = spec_for(tuple(x.shape), tuple(logical), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def default_rules(cfg, mesh: Mesh, batch_size: int) -> dict[str, Any]:
+    """Standard logical->mesh mapping for one step trace."""
+    from repro.parallel import sharding as sh
+
+    dp = sh.dp_axes_for(batch_size, mesh, cfg.policy.dp_only)
+    mdl = None if cfg.policy.dp_only else (
+        "model" if "model" in mesh.axis_names else None
+    )
+    # decode attention must match the KV-cache layout (sharding.cache_pspec):
+    # kv-heads-sharded cache -> per-head-local decode; hd-sharded cache ->
+    # shard decode q/k on head_dim so the score contraction partial-sums into
+    # one small (B,H,T) all-reduce instead of all-gathering the cache
+    # (measured: 2.2 GB/step of f32 cache gathers on internlm2 decode_32k).
+    kv_divides = mdl is None or cfg.hkv_eff % mesh.shape[mdl] == 0
+    return {
+        "dec_heads": (mdl if kv_divides else None),
+        "dec_hd": (None if kv_divides else mdl),
+        "batch": dp,
+        "seq": None,            # sequence/context parallelism: set to an axis
+        "heads": mdl,
+        "kv_heads": mdl,
+        # NEVER map head_dim to a mesh axis: it is the attention contraction
+        # dim, and sharding it costs an all-reduce per score matmul
+        # (EXPERIMENTS.md §Perf iteration 1).  spec_for drops non-divisible
+        # head counts to replicated instead.
+        "head_dim": None,
+        "ff": mdl,
+        "vocab": mdl,
+        "experts": mdl,
+        "embed": None,
+        "inner": mdl,           # mamba/xlstm d_inner
+        "cache_seq": None,
+    }

@@ -1,0 +1,265 @@
+"""Logical sharding rules -> PartitionSpecs (DESIGN.md §4).
+
+Mesh axes: ('pod', 'data', 'model') multi-pod, ('data', 'model') single-pod.
+  batch    -> ('pod', 'data')           (DP; pod composes with data)
+  d_model  -> 'data' when policy.fsdp_params (FSDP/ZeRO-3 within a pod)
+  heads/ff/experts/vocab/inner dims -> 'model' (TP/EP)
+
+Optimizer state inherits the param specs, so ZeRO-1 comes for free.
+Uneven dims (kv=8 over model=16, vocab % 16 != 0) rely on GSPMD padding —
+valid, at some waste; the perf loop revisits the wasteful ones (§Perf).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_axes_for(batch_size: int, mesh: Mesh, dp_only: bool = False) -> tuple:
+    """Largest preferred DP axis set whose size divides `batch_size`.
+
+    Preference: all DP axes (plus 'model' for dp_only archs — pure DP), then
+    progressively smaller sets.  B=1 long-context cells end up replicated."""
+    base = list(dp_axes(mesh))
+    candidates: list[tuple] = []
+    if dp_only and "model" in mesh.axis_names:
+        candidates.append(tuple(base + ["model"]))
+    for i in range(len(base) + 1):          # drop 'pod' first, then 'data'
+        candidates.append(tuple(base[i:]))
+    for cand in candidates:
+        if not cand or batch_size % math.prod(mesh.shape[a] for a in cand) == 0:
+            return cand
+    return ()
+
+
+def _fsdp(cfg: ModelConfig, mesh: Mesh):
+    return "data" if (cfg.policy.fsdp_params and "data" in mesh.axis_names) else None
+
+
+def _mdl(mesh: Mesh):
+    return "model" if "model" in mesh.axis_names else None
+
+
+def param_pspec(path: tuple, leaf: Any, cfg: ModelConfig, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf, keyed on tree path + rank.
+
+    dp_only archs take no tensor parallelism (the batch is sharded over every
+    axis instead) but still FSDP-shard params over 'data' for memory."""
+    keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    name = keys[-1]
+    fsdp = _fsdp(cfg, mesh)
+    mdl = None if cfg.policy.dp_only else _mdl(mesh)
+    stacked = "blocks" in keys           # block params carry a leading (R,) axis
+    lead: tuple = (None,) if stacked else ()
+    nd = leaf.ndim - len(lead)
+    in_moe = cfg.moe is not None and "ffn" in keys
+
+    def _divides(axis, size) -> bool:
+        return axis is not None and size % mesh.shape[axis] == 0
+
+    if name == "embed":
+        return P(mdl, fsdp)
+    if name == "lm_head":
+        return P(fsdp, mdl)
+    if name in ("wq", "wk", "wv") and nd == 3:        # (d, H, hd) attn / mlstm(din,nh,hd)
+        # shard the HEAD dim only when it divides; NEVER fall back to head_dim
+        # (hd is the attention contraction dim — sharding it turns every
+        # score matmul into an all-reduce; measured 78 s collective on the
+        # musicgen train cell, EXPERIMENTS.md §Perf iteration 1)
+        h = leaf.shape[len(lead) + 1]
+        return P(*lead, fsdp, mdl if _divides(mdl, h) else None, None)
+    if name == "wo" and nd == 3 and not in_moe:       # attn out (H, hd, d)
+        h = leaf.shape[len(lead)]
+        return P(*lead, mdl if _divides(mdl, h) else None, None, fsdp)
+    if in_moe:
+        if name == "router":
+            return P(*lead, fsdp, mdl)
+        if name in ("wi", "wg") and nd == 3:          # (E, d, f)
+            return P(*lead, mdl, fsdp, None)
+        if name == "wo" and nd == 3:                  # (E, f, d)
+            return P(*lead, mdl, None, fsdp)
+    if name in ("wi", "wg") and nd == 2:              # dense MLP (d, ff)
+        return P(*lead, fsdp, mdl)
+    if name == "wo" and nd == 2:                      # dense MLP out (ff, d)
+        return P(*lead, mdl, fsdp)
+    # mamba
+    if name == "in_proj":
+        return P(*lead, fsdp, mdl)
+    if name == "out_proj":
+        return P(*lead, mdl, fsdp)
+    if name == "conv_w":
+        return P(*lead, None, mdl)
+    if name in ("conv_b", "dt_bias", "D"):
+        return P(*lead, mdl)
+    if name == "x_proj":
+        return P(*lead, mdl, None)
+    if name == "dt_proj":
+        return P(*lead, None, mdl)
+    if name == "A_log":
+        return P(*lead, mdl, None)
+    # xlstm
+    if name == "up":
+        return P(*lead, fsdp, mdl)
+    if name == "down":
+        return P(*lead, mdl, fsdp)
+    if name == "wif":                                  # (din, nh, 2)
+        return P(*lead, mdl, None, None)
+    if name == "wx":                                   # (din, 4, din)
+        return P(*lead, mdl, None, None)
+    if name == "r":                                    # (nh, hd, 4, hd)
+        return P(*lead, *([None] * nd))
+    # norms, biases, gates
+    return P(*lead, *([None] * nd))
+
+
+def fit_pspec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Make `spec` legal for `shape`: every sharded dim must divide evenly.
+
+    jit in/out shardings REQUIRE divisibility (no GSPMD padding at the pjit
+    boundary).  Axes that do not divide their assigned dim are re-homed onto
+    the first still-unsharded dim they DO divide (e.g. kv_heads=8 over
+    model=16 moves to head_dim=128 — column parallelism inside the head), and
+    dropped (replicated) only when nothing fits.
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    norm: list[list] = []
+    for e in entries[: len(shape)]:
+        if e is None:
+            norm.append([])
+        elif isinstance(e, (tuple, list)):
+            norm.append([a for a in e if a is not None])
+        else:
+            norm.append([e])
+
+    placed: list[list] = []
+    dropped: list = []
+    for size, axes in zip(shape, norm):
+        keep: list = []
+        prod = 1
+        for a in axes:
+            asz = mesh.shape[a]
+            if size % (prod * asz) == 0:
+                keep.append(a)
+                prod *= asz
+            else:
+                dropped.append(a)
+        placed.append(keep)
+
+    for a in list(dropped):
+        asz = mesh.shape[a]
+        for i, size in enumerate(shape):
+            if not placed[i] and size % asz == 0:
+                placed[i].append(a)
+                dropped.remove(a)
+                break
+
+    out = []
+    for k in placed:
+        if not k:
+            out.append(None)
+        elif len(k) == 1:
+            out.append(k[0])
+        else:
+            out.append(tuple(k))
+    return P(*out)
+
+
+def fit_specs(specs: Any, abstract: Any, mesh: Mesh) -> Any:
+    """Apply fit_pspec leaf-wise: specs tree (P leaves) x abstract tree."""
+    return jax.tree.map(
+        lambda s, l: fit_pspec(s, tuple(l.shape), mesh),
+        specs,
+        abstract,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    raw = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(path, leaf, cfg, mesh), params
+    )
+    return fit_specs(raw, params, mesh)
+
+
+def param_shardings(params: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), param_specs(params, cfg, mesh)
+    )
+
+
+def batch_specs(batch: Any, mesh: Mesh, cfg: ModelConfig | None = None) -> Any:
+    dp_only = bool(cfg is not None and cfg.policy.dp_only)
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        dp = dp_axes_for(leaf.shape[0], mesh, dp_only)
+        return fit_pspec(P(dp, *([None] * (leaf.ndim - 1))), tuple(leaf.shape), mesh)
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_pspec(
+    path: tuple, leaf: Any, cfg: ModelConfig, mesh: Mesh, batch_size: int | None = None
+) -> P:
+    """Decode-cache leaves carry a leading (R,) stack axis, then batch.
+
+    When the batch dim cannot use all DP axes (long_500k B=1), the KV seq dim
+    takes the spare DP axes instead — flash-decode style cache partitioning."""
+    keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    name = keys[-1]
+    if batch_size is None:
+        batch_size = leaf.shape[1]
+    dp = dp_axes_for(batch_size, mesh, cfg.policy.dp_only)
+    spare = tuple(a for a in dp_axes(mesh) if a not in dp)
+    mdl = _mdl(mesh) if not cfg.policy.dp_only else None
+    if name in ("k", "v"):              # (R, B, T, Hkv, hd)
+        if cfg.policy.seq_shard_cache:
+            seq = (*spare, mdl) if mdl else spare
+            return P(None, dp, seq if seq else None, None, None)
+        # model axis: Hkv if it divides, else head_dim.  NEVER the seq dim —
+        # a dynamic-update-slice at a traced position on a T-sharded cache
+        # all-gathers the whole cache (measured 1.75 s collective / decode
+        # step on minitron decode_32k; §Perf iteration 2).  hd-sharded decode
+        # scores cost one small (B,H,T) all-reduce instead.
+        hkv = leaf.shape[3]
+        if mdl is not None and hkv % mesh.shape[mdl] == 0:
+            return P(None, dp, spare if spare else None, mdl, None)
+        return P(None, dp, spare if spare else None, None, mdl)
+    if name == "conv":                   # (R, B, dconv-1, din)
+        return P(None, dp, None, mdl)
+    if name == "ssm":                    # (R, B, din, ds)
+        return P(None, dp, mdl, None)
+    if name == "c" and leaf.ndim == 5:   # mlstm (R, B, nh, hd, hd)
+        return P(None, dp, None, None, None)
+    if name == "n" and leaf.ndim == 4:   # mlstm (R, B, nh, hd)
+        return P(None, dp, None, None)
+    # slstm states (R, B, din) and mlstm scalars
+    return P(None, dp, *([None] * (leaf.ndim - 2)))
+
+
+def cache_specs(
+    caches: Any, cfg: ModelConfig, mesh: Mesh, batch_size: int | None = None
+) -> Any:
+    raw = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_pspec(path, leaf, cfg, mesh, batch_size), caches
+    )
+    return fit_specs(raw, caches, mesh)
+
+
+def logits_spec(mesh: Mesh) -> P:
+    return P(dp_axes(mesh), None, _mdl(mesh))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

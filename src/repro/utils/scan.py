@@ -1,0 +1,60 @@
+"""lax.scan wrapper that can unroll at trace time — cost-probe support.
+
+XLA's cost_analysis() counts a while-loop body ONCE, so any scanned model
+under-reports FLOPs/bytes/collectives.  The dry-run cost probes re-trace the
+model with inner chunk scans UNROLLED (and the layer stack at depth 1 and 2,
+extrapolated affinely), which makes cost_analysis exact.  Production traces
+keep lax.scan (compile time, memory).
+
+Only chunk-loops go through this wrapper (attention q-chunks, mamba chunks,
+mLSTM chunks).  The sLSTM time scan stays a lax.scan always: its per-step
+recurrent einsum is <1% of model FLOPs (documented in EXPERIMENTS.md §Dry-run
+methodology) and unrolling seq_len steps is not tractable.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_UNROLL: contextvars.ContextVar = contextvars.ContextVar("unroll_scans", default=False)
+MAX_UNROLL = 4096
+
+
+@contextlib.contextmanager
+def unroll_scans():
+    tok = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)
+
+
+def unrolling() -> bool:
+    return bool(_UNROLL.get())
+
+
+def scan(f, init, xs, length: int | None = None):
+    """Drop-in for lax.scan(f, init, xs) on chunk loops."""
+    if not _UNROLL.get():
+        return lax.scan(f, init, xs, length=length)
+    if length is None:
+        length = jax.tree.leaves(xs)[0].shape[0]
+    if length > MAX_UNROLL:
+        return lax.scan(f, init, xs, length=length)
+    carry = init
+    ys = []
+    for i in range(length):
+        x_i = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, x_i)
+        ys.append(y)
+    stacked = (
+        None
+        if ys[0] is None
+        else jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    )
+    return carry, stacked

@@ -1,0 +1,19 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the real device
+count (1 CPU).  Multi-device tests spawn subprocesses (test_distributed.py).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,146 @@
+"""Active search vs the exact-kNN oracle: recall, classification, Eq. 1."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import active_search as act
+from repro.core import exact
+from repro.core import pyramid as pyr
+from repro.core.grid import GridConfig, build_index
+from repro.core.projection import identity_projection
+
+
+def _setup(rng, n=2000, k_classes=3, grid=256):
+    pts = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, k_classes, size=n), jnp.int32)
+    cfg = GridConfig(grid_size=grid, tile=16, n_classes=k_classes,
+                     window=48, row_cap=48, r0=10, k_slack=2.0, max_iters=16)
+    proj = identity_projection(pts)
+    return pts, labels, cfg, build_index(pts, cfg, proj, labels=labels)
+
+
+def test_refined_recall_high(rng):
+    pts, labels, cfg, idx = _setup(rng)
+    q = jnp.asarray(rng.normal(size=(64, 2)), jnp.float32)
+    res = act.search(idx, cfg, q, 11, mode="refined")
+    ex = exact.knn(q, pts, 11)
+    recall = np.mean([
+        len(set(np.asarray(res.ids[i]).tolist()) & set(np.asarray(ex.ids[i]).tolist())) / 11
+        for i in range(64)
+    ])
+    assert recall > 0.9, recall
+
+
+def test_refined_dists_sorted_and_correct(rng):
+    pts, _, cfg, idx = _setup(rng, n=800)
+    q = jnp.asarray(rng.normal(size=(8, 2)), jnp.float32)
+    res = act.search(idx, cfg, q, 5, mode="refined")
+    d = np.asarray(res.dists)
+    assert (np.diff(d, axis=1) >= -1e-6).all()
+    # distances match the true metric for returned ids
+    for i in range(8):
+        for j in range(5):
+            if res.valid[i, j]:
+                pid = int(res.ids[i, j])
+                true = float(jnp.linalg.norm(pts[pid] - q[i]))
+                assert abs(true - float(res.dists[i, j])) < 1e-4
+
+
+def test_paper_mode_counts(rng):
+    """Paper mode returns points inside the final circle, by grid distance."""
+    pts, labels, cfg, idx = _setup(rng, n=1000)
+    q = jnp.asarray(rng.normal(size=(16, 2)), jnp.float32)
+    res = act.search(idx, cfg, q, 11, mode="paper")
+    assert res.ids.shape == (16, 11)
+    assert bool(jnp.all(res.count[res.converged] >= 11))
+
+
+def test_classify_matches_exact_mostly(rng):
+    pts, labels, cfg, idx = _setup(rng, n=3000)
+    q = jnp.asarray(rng.normal(size=(100, 2)), jnp.float32)
+    pred = act.classify(idx, cfg, q, 11, mode="refined")
+    truth = exact.classify(q, pts, labels, 11, n_classes=3)
+    acc = float(jnp.mean((pred == truth).astype(jnp.float32)))
+    assert acc >= 0.9, acc  # paper reports up to 98% on this setup
+
+
+def test_radius_search_reaches_k(rng):
+    pts, _, cfg, idx = _setup(rng, n=2000)
+    q = jnp.asarray(rng.normal(size=(2,)), jnp.float32)
+    from repro.core import projection as pl
+    qg = pl.to_grid_coords(idx.proj, q, cfg.grid_size)
+    stats = pyr.radius_search(idx, cfg, qg, 11)
+    assert int(stats["count"]) >= 11
+    assert int(stats["radius"]) >= 1
+
+
+def test_count_in_circle_matches_bruteforce(rng):
+    pts, _, cfg, idx = _setup(rng, n=500)
+    from repro.core import projection as pl
+    coords = np.asarray(pl.to_grid_coords(idx.proj, pts, cfg.grid_size))
+    centers = np.floor(coords) + 0.5
+    q = jnp.asarray([cfg.grid_size / 2, cfg.grid_size / 2], jnp.float32)
+    for r in (3, 10, 40):
+        got = int(pyr.count_total(idx, cfg, q, jnp.int32(r)))
+        lvl = int(pyr.level_for_radius(jnp.int32(r), cfg))
+        if lvl == 0:  # exact at base level
+            want = int((((centers - np.asarray(q)) ** 2).sum(axis=1) <= r * r).sum())
+            assert got == want, (r, got, want)
+        else:  # coarser levels approximate; mass is bounded by window total
+            assert 0 <= got <= 500
+
+
+def test_l1_metric(rng):
+    pts = jnp.asarray(rng.normal(size=(1000, 2)), jnp.float32)
+    cfg = GridConfig(grid_size=128, tile=16, window=48, row_cap=48, r0=8,
+                     k_slack=2.0, metric="l1")
+    idx = build_index(pts, cfg, identity_projection(pts))
+    q = jnp.asarray(rng.normal(size=(16, 2)), jnp.float32)
+    res = act.search(idx, cfg, q, 7)
+    # L1 distances
+    for i in range(4):
+        if res.valid[i, 0]:
+            pid = int(res.ids[i, 0])
+            want = float(jnp.sum(jnp.abs(pts[pid] - q[i])))
+            assert abs(want - float(res.dists[i, 0])) < 1e-4
+
+
+def test_truncation_flag_when_window_too_small(rng):
+    """A huge k forces the circle past the candidate window -> truncated."""
+    pts = jnp.asarray(rng.normal(size=(500, 2)), jnp.float32)
+    cfg = GridConfig(grid_size=256, tile=16, window=8, row_cap=8, r0=4,
+                     k_slack=1.5)
+    idx = build_index(pts, cfg, identity_projection(pts))
+    q = jnp.zeros((1, 2), jnp.float32)
+    res = act.search(idx, cfg, q, 200)
+    assert bool(res.truncated[0])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=hst.integers(0, 2**31 - 1), k=hst.integers(1, 20))
+def test_property_refined_subset_of_window_is_exact(seed, k):
+    """Within the candidate window, refined results == exact kNN restricted
+    to those candidates (the re-rank is exact by construction)."""
+    rng = np.random.default_rng(seed)
+    pts = jnp.asarray(rng.normal(size=(300, 2)), jnp.float32)
+    cfg = GridConfig(grid_size=64, tile=8, window=24, row_cap=64, r0=4,
+                     k_slack=2.0)
+    idx = build_index(pts, cfg, identity_projection(pts))
+    q = jnp.asarray(rng.normal(size=(1, 2)), jnp.float32)
+    res = act.search(idx, cfg, q, k)
+    valid = np.asarray(res.valid[0])
+    ids = np.asarray(res.ids[0])[valid]
+    dists = np.asarray(res.dists[0])[valid]
+    assert len(set(ids.tolist())) == len(ids)          # no duplicates
+    assert (np.diff(dists) >= -1e-6).all()             # sorted
+
+
+def test_eq1_update_rule():
+    """r' = round(r * sqrt(k / n)) — the paper's Eq. 1, directly."""
+    r, k, n = jnp.int32(100), 11, jnp.int32(44)
+    ratio = jnp.sqrt(k / jnp.maximum(n, 1).astype(jnp.float32))
+    r_new = jnp.round(r.astype(jnp.float32) * ratio).astype(jnp.int32)
+    assert int(r_new) == 50  # sqrt(11/44) = 1/2

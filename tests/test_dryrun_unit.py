@@ -1,0 +1,113 @@
+"""Dry-run machinery unit tests: HLO collective parsing, roofline math,
+cell planning.  (The real 512-device dry-run runs via dryrun.py; its results
+land in EXPERIMENTS.md.)"""
+
+import numpy as np
+import pytest
+
+from repro.launch import roofline as rl
+
+
+HLO = """
+HloModule jit_step
+ENTRY %main {
+  %p0 = bf16[16,4096]{1,0} parameter(0)
+  %ag = bf16[256,4096]{1,0} all-gather(%p0), replica_groups={}
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%sum
+  %rs = f32[64,32]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = bf16[8,8]{1,0} all-to-all(%z)
+  %cp = u8[100]{0} collective-permute(%w)
+  %ags = (f32[128,8]{1,0}, f32[128,8]{1,0}) all-gather-start(%q)
+  %agd = (f32[128,8]{1,0}, f32[128,8]{1,0}) all-gather-done(%ags)
+  %not = f32[999]{0} add(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_parses_kinds():
+    got = rl.collective_bytes(HLO)
+    assert got["all-gather"] == 256 * 4096 * 2 + 2 * 128 * 8 * 4  # sync + start
+    assert got["all-reduce"] == 1024 * 4
+    assert got["reduce-scatter"] == 64 * 32 * 4
+    assert got["all-to-all"] == 8 * 8 * 2
+    assert got["collective-permute"] == 100
+
+
+def test_done_ops_not_double_counted():
+    two_starts = HLO + HLO  # paranoia: parser is line-based and stateless
+    got = rl.collective_bytes(two_starts)
+    assert got["all-gather"] == 2 * (256 * 4096 * 2 + 2 * 128 * 8 * 4)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = rl.Roofline(
+        flops=197e12 * 0.5,        # 0.5 s compute
+        hbm_bytes=819e9 * 0.2,     # 0.2 s memory
+        coll_bytes=50e9 * 0.8,     # 0.8 s collective
+        coll_by_kind={}, chips=256,
+    ).finalize()
+    assert abs(r.compute_s - 0.5) < 1e-9
+    assert abs(r.memory_s - 0.2) < 1e-9
+    assert abs(r.collective_s - 0.8) < 1e-9
+    assert r.bottleneck == "collective"
+    assert r.step_time_s == r.collective_s
+
+
+def test_model_flops_train_vs_decode():
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES
+    cfg = get_config("internlm2-1.8b")
+    t = rl.model_flops(cfg, SHAPES["train_4k"], "train")
+    d = rl.model_flops(cfg, SHAPES["decode_32k"], "decode")
+    n = cfg.param_count()
+    assert abs(t - 6 * n * 256 * 4096) / t < 1e-6
+    assert abs(d - 2 * n * 128) / d < 1e-6
+
+
+def test_cell_plan():
+    from repro.launch.dryrun import cell_plan
+    assert cell_plan("minitron-8b", "train_4k") == "run"
+    assert cell_plan("stablelm-12b", "long_500k") == "skip"
+    assert cell_plan("jamba-v0.1-52b", "long_500k") == "run"
+    assert cell_plan("xlstm-125m", "long_500k") == "run"
+    assert cell_plan("minitron-8b", "long_500k") == "retrieval"
+
+
+def test_shape_bytes_tuple_shapes():
+    assert rl._shape_bytes("(bf16[2,3]{1,0}, f32[4]{0})") == 2 * 3 * 2 + 4 * 4
+    assert rl._shape_bytes("pred[7]") == 7
+    assert rl._shape_bytes("token[]") == 0
+
+
+FUSED_HLO = """
+HloModule m
+%fused_computation.1 (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64]{0} parameter(0)
+  %big_internal = f32[1000000]{0} broadcast(%p0)
+  ROOT %r = f32[64]{0} slice(%big_internal)
+}
+%sum_reducer (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add = f32[] add(%a, %b)
+}
+ENTRY %main (x: f32[128]) -> f32[64] {
+  %x = f32[128]{0} parameter(0)
+  %d = f32[128]{0} add(%x, %x)
+  %f = f32[64]{0} fusion(%d), kind=kLoop, calls=%fused_computation.1
+  %red = f32[] reduce(%d, %c), dimensions={0}, to_apply=%sum_reducer
+  ROOT %out = f32[64]{0} multiply(%f, %f)
+}
+"""
+
+
+def test_fused_bytes_excludes_fusion_bodies():
+    got = rl.fused_bytes(FUSED_HLO)
+    # add 128*4 + fusion output 64*4 + reduce 4 + multiply 64*4; the 1M-elem
+    # buffer inside the fusion body and the reducer lambda must NOT count
+    assert got == 128 * 4 + 64 * 4 + 4 + 64 * 4, got
+
+
+def test_fused_bytes_shape_pred():
+    got = rl.fused_bytes(FUSED_HLO, shape_pred=lambda dims: dims == [128])
+    assert got == 128 * 4, got

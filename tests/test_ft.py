@@ -1,0 +1,119 @@
+"""Fault tolerance: preemption drain, straggler stats, restart supervisor,
+and the full train-loop drills (resume, injected failure, elastic reshard)."""
+
+import os
+import signal
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.launch import ft
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import TrainConfig, run, train_loop
+
+
+def test_step_timer_flags_stragglers():
+    t = ft.StepTimer(threshold=2.0, warmup=2)
+    for i in range(5):
+        t.record(i, 0.1)
+    s = t.record(5, 0.5)
+    assert s.is_straggler
+    s2 = t.record(6, 0.1)
+    assert not s2.is_straggler
+    assert t.straggler_steps == [5]
+
+
+def test_step_timer_reshard_after_persistent_slowness():
+    t = ft.StepTimer(threshold=1.5, warmup=1)
+    t.record(0, 0.1)
+    t.record(1, 0.1)
+    for i in range(2, 8):
+        t.record(i, 1.0)
+    assert t.should_reshard(patience=5)
+
+
+def test_preemption_guard_sets_drain():
+    with ft.PreemptionGuard(signals=(signal.SIGUSR1,)) as g:
+        assert not g.draining
+        os.kill(os.getpid(), signal.SIGUSR1)
+        assert g.draining
+
+
+def test_run_with_restarts_retries_then_succeeds():
+    calls = {"n": 0}
+
+    def loop():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("boom")
+        return 7
+
+    restarts = []
+    out = ft.run_with_restarts(
+        loop, max_restarts=5, backoff_s=0.01,
+        on_restart=lambda k, e: restarts.append(k),
+    )
+    assert out == 7
+    assert restarts == [1, 2]
+
+
+def test_run_with_restarts_gives_up():
+    def loop():
+        raise RuntimeError("always")
+
+    with pytest.raises(RuntimeError):
+        ft.run_with_restarts(loop, max_restarts=2, backoff_s=0.01)
+
+
+# ------------------------------------------------------- train-loop drills ---
+
+
+def _tc(tmp_path, **kw):
+    kw.setdefault("steps", 6)
+    kw.setdefault("batch", 2)
+    kw.setdefault("seq", 32)
+    kw.setdefault("ckpt_dir", str(tmp_path))
+    kw.setdefault("ckpt_every", 2)
+    kw.setdefault("log_every", 100)
+    return TrainConfig(**kw)
+
+
+def test_train_resumes_from_checkpoint(tmp_path):
+    cfg = get_smoke("internlm2-1.8b")
+    mesh = make_host_mesh(1, 1)
+    out1 = train_loop(cfg, _tc(tmp_path, steps=4), mesh, log=lambda *_: None)
+    assert out1["final_step"] == 4
+    # second run continues to 6 (resumed from step-4 checkpoint, not step 0)
+    out2 = train_loop(cfg, _tc(tmp_path, steps=6), mesh, log=lambda *_: None)
+    assert out2["final_step"] == 6
+    assert len(out2["losses"]) == 2  # only steps 4,5 executed
+
+
+def test_injected_failure_recovers(tmp_path):
+    cfg = get_smoke("internlm2-1.8b")
+    mesh = make_host_mesh(1, 1)
+    tc = _tc(tmp_path, steps=6, fail_at=3)
+    out = run(cfg, tc, mesh, max_restarts=2, log=lambda *_: None)
+    assert out["final_step"] == 6
+
+
+def test_elastic_restore_onto_new_mesh(tmp_path):
+    """Checkpoint from mesh A restores onto mesh B (1x1 here; the multi-device
+    version runs in test_distributed.py via subprocess)."""
+    from repro.launch import steps as st
+    from repro.optim import adamw
+    from repro.checkpoint.store import CheckpointManager
+
+    cfg = get_smoke("internlm2-1.8b")
+    mesh = make_host_mesh(1, 1)
+    out = train_loop(cfg, _tc(tmp_path, steps=2), mesh, log=lambda *_: None)
+    mgr = CheckpointManager(str(tmp_path))
+    step_cfg = st.StepConfig()
+    abstract = st.train_state_shapes(cfg, adamw.AdamWConfig(), step_cfg)
+    sh_b = st._ns(mesh, st.train_state_specs(abstract, cfg, mesh))
+    state = mgr.restore(2, abstract, shardings=sh_b)
+    got = jax.tree.map(lambda a: np.asarray(a), state["params"]["embed"])
+    want = np.asarray(jax.device_get(out["state"]["params"]["embed"]))
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,62 @@
+"""Summed-area-table counter (beyond-paper variant): exactness + integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import exact, integral
+from repro.core import active_search as act
+from repro.core.grid import GridConfig, build_index
+from repro.core.projection import identity_projection
+
+
+def test_count_rect_exact(rng):
+    base = jnp.asarray(rng.integers(0, 5, size=(32, 32, 2)), jnp.int32)
+    sat = integral.build_sat(base)
+    for _ in range(20):
+        x0, y0 = rng.integers(0, 32, 2)
+        x1 = rng.integers(x0, 33)
+        y1 = rng.integers(y0, 33)
+        got = np.asarray(integral.count_rect(
+            sat, jnp.int32(x0), jnp.int32(x1), jnp.int32(y0), jnp.int32(y1)))
+        want = np.asarray(base[x0:x1, y0:y1].sum(axis=(0, 1)))
+        np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=hst.integers(0, 2**31 - 1))
+def test_count_linf_matches_bruteforce(seed):
+    rng = np.random.default_rng(seed)
+    s = 24
+    base = jnp.asarray(rng.integers(0, 3, size=(s, s, 1)), jnp.int32)
+    sat = integral.build_sat(base)
+    q = jnp.asarray(rng.uniform(0, s, size=2), jnp.float32)
+    r = jnp.float32(rng.uniform(0.2, s))
+    got = int(integral.count_linf(sat, q, r)[0])
+    centers = np.stack(np.meshgrid(np.arange(s) + 0.5, np.arange(s) + 0.5,
+                                   indexing="ij"), -1)
+    inside = np.max(np.abs(centers - np.asarray(q)), axis=-1) <= float(r)
+    want = int((np.asarray(base[..., 0]) * inside).sum())
+    assert got == want
+
+
+def test_sat_counter_end_to_end(rng):
+    pts = jnp.asarray(rng.normal(size=(5000, 2)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 3, size=5000), jnp.int32)
+    cfg = GridConfig(grid_size=256, tile=16, n_classes=3, window=48,
+                     row_cap=48, r0=10, k_slack=2.0, counter="sat")
+    idx = build_index(pts, cfg, identity_projection(pts), labels=labels)
+    assert idx.sat is not None
+    q = jnp.asarray(rng.normal(size=(50, 2)), jnp.float32)
+    pred = act.classify(idx, cfg, q, 11)
+    truth = exact.classify(q, pts, labels, 11, n_classes=3)
+    acc = float(jnp.mean((pred == truth).astype(jnp.float32)))
+    assert acc >= 0.9, acc
+
+
+def test_sat_mass_conservation(rng):
+    pts = jnp.asarray(rng.normal(size=(777, 2)), jnp.float32)
+    cfg = GridConfig(grid_size=64, tile=8, window=8, row_cap=16, counter="sat")
+    idx = build_index(pts, cfg, identity_projection(pts))
+    assert int(idx.sat[-1, -1].sum()) == 777

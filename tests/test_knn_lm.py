@@ -1,0 +1,68 @@
+"""kNN-LM head + retrieval memory (the paper's technique inside the LM)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import knn_lm, retrieval_memory as rmem
+from repro.core.grid import GridConfig
+
+
+def _store(rng, n=2048, d=16):
+    keys = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    toks = jnp.asarray(rng.integers(0, 64, size=n), jnp.int32)
+    cfg = knn_lm.KNNLMConfig(k=8, lam=0.3)
+    return keys, toks, cfg, knn_lm.build_datastore(keys, toks, cfg)
+
+
+def test_knn_logprobs_normalized(rng):
+    keys, toks, cfg, idx = _store(rng)
+    h = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    logp = knn_lm.knn_logprobs(idx, cfg, h, vocab_size=64)
+    p = np.exp(np.asarray(logp))
+    assert p.shape == (4, 64)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, atol=1e-3)
+
+
+def test_knn_retrieves_exact_key(rng):
+    """Querying WITH a stored key must put mass on that key's token."""
+    keys, toks, cfg, idx = _store(rng)
+    qi = 17
+    logp = knn_lm.knn_logprobs(idx, cfg, keys[qi:qi + 1], vocab_size=64)
+    tok = int(toks[qi])
+    assert float(np.exp(logp[0, tok])) > 1.0 / 64
+
+
+def test_interpolate_is_logaddexp(rng):
+    cfg = knn_lm.KNNLMConfig(lam=0.25)
+    lm = jnp.asarray(rng.normal(size=(2, 10)), jnp.float32)
+    knn_lp = jax.nn.log_softmax(jnp.asarray(rng.normal(size=(2, 10)), jnp.float32))
+    out = knn_lm.interpolate(lm, knn_lp, cfg)
+    want = np.log(
+        0.25 * np.exp(np.asarray(knn_lp))
+        + 0.75 * np.asarray(jax.nn.softmax(lm, axis=-1))
+    )
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-5)
+    # still a distribution
+    np.testing.assert_allclose(np.exp(np.asarray(out)).sum(-1), 1.0, atol=1e-4)
+
+
+def test_retrieval_memory_returns_valid_past_positions(rng):
+    cfg = rmem.RetrievalMemoryConfig(n_retrieved=8)
+    proj = rmem.make_projection(jax.random.PRNGKey(0), head_dim=16)
+    keys = jnp.asarray(rng.normal(size=(512, 16)) * 0.3, jnp.float32)
+    idx = rmem.build_memory_index(keys, cfg, proj)
+    q = keys[100:102]
+    pos, ok = rmem.retrieve_positions(idx, cfg, q)
+    assert pos.shape == (2, 8)
+    assert bool(ok.any())
+    assert int(pos.max()) < 512 and int(pos.min()) >= 0
+    # querying with a stored key must retrieve its own position
+    assert 100 in np.asarray(pos[0])
+
+
+def test_key_query_summaries(rng):
+    k = jnp.asarray(rng.normal(size=(32, 4, 16)), jnp.float32)
+    s = rmem.key_summary(k)
+    assert s.shape == (32, 16)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(k.mean(axis=1)), rtol=1e-6)

@@ -1,0 +1,148 @@
+"""Per-arch smoke tests (reduced configs): one forward/train step on CPU,
+shape + finiteness asserts, and prefill/decode consistency vs the training
+forward (teacher forcing) — the strongest cheap correctness check we have."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_smoke
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def _batch(cfg, rng, b=2, s=32):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, size=(b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, size=(b, s)), jnp.int32),
+    }
+    if cfg.frontend == "audio":
+        batch["frame_embeds"] = jnp.asarray(
+            rng.normal(size=(b, s, cfg.d_model)), jnp.float32
+        )
+    if cfg.frontend == "vision":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_frontend_tokens, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_and_finite(arch, rng, key):
+    cfg = get_smoke(arch)
+    params = M.init_params(key, cfg)
+    b, s = 2, 32
+    batch = _batch(cfg, rng, b, s)
+    logits, aux = M.forward(params, cfg, batch)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_runs_and_improves(arch, rng, key):
+    """Two AdamW steps on one repeated batch must reduce the loss."""
+    cfg = get_smoke(arch)
+    params = M.init_params(key, cfg)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=100)
+    opt = adamw.init(params)
+    batch = _batch(cfg, rng, 2, 16)
+
+    @jax.jit
+    def step(params, opt):
+        (loss, _), grads = jax.value_and_grad(M.loss_fn, has_aux=True)(
+            params, cfg, batch
+        )
+        params, opt, _ = adamw.update(opt_cfg, grads, opt, params)
+        return params, opt, loss
+
+    losses = []
+    for _ in range(3):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_decode_matches_forward(arch, rng, key):
+    """Teacher-forced decode after prefill must reproduce forward() logits."""
+    cfg = get_smoke(arch)
+    if cfg.frontend == "audio":
+        pytest.skip("audio frontend feeds embeddings, not tokens")
+    params = M.init_params(key, cfg)
+    b, s = 2, 16
+    batch = _batch(cfg, rng, b, s)
+    tokens = batch["tokens"]
+
+    full_logits, _ = M.forward(params, cfg, batch)
+
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = tokens[:, : s - 2]
+    logits_p, caches, _ = M.prefill(params, cfg, pre_batch, cache_len=s)
+    # decode the (s-2)-th token -> logits for position s-2
+    tok = tokens[:, s - 2]
+    logits_d, caches, _ = M.decode_step(
+        params, cfg, caches, tok, jnp.int32(s - 2)
+    )
+    want_p = full_logits[:, s - 3, :].astype(jnp.float32)
+    want_d = full_logits[:, s - 2, :].astype(jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(logits_p.astype(jnp.float32)), np.asarray(want_p),
+        rtol=0.15, atol=0.15,
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_d.astype(jnp.float32)), np.asarray(want_d),
+        rtol=0.15, atol=0.15,
+    )
+    # top-1 agreement (bf16 tolerant)
+    agree = np.mean(
+        np.asarray(jnp.argmax(logits_d, -1)) == np.asarray(jnp.argmax(want_d, -1))
+    )
+    assert agree >= 0.5
+
+
+@pytest.mark.parametrize("arch", ["minitron-8b", "jamba-v0.1-52b", "xlstm-125m",
+                                  "qwen2-moe-a2.7b"])
+def test_decode_cache_structure_matches_prefill(arch, rng, key):
+    cfg = get_smoke(arch)
+    params = M.init_params(key, cfg)
+    b, s = 2, 16
+    batch = _batch(cfg, rng, b, s)
+    _, caches_p, _ = M.prefill(params, cfg, batch, cache_len=s)
+    caches_i = M.init_caches(cfg, b, s)
+    t1 = jax.tree.map(lambda a: (a.shape, str(a.dtype)), caches_p)
+    t2 = jax.tree.map(lambda a: (a.shape, str(a.dtype)), caches_i)
+    assert jax.tree_util.tree_structure(t1) == jax.tree_util.tree_structure(t2)
+    assert jax.tree.leaves(t1) == jax.tree.leaves(t2)
+
+
+def test_unrolled_matches_scanned(rng, key):
+    """scan_layers=False computes the same function (FLOP-accounting probe)."""
+    import dataclasses
+    cfg = get_smoke("internlm2-1.8b")
+    params = M.init_params(key, cfg)
+    batch = _batch(cfg, rng, 2, 16)
+    l1, _ = M.forward(params, cfg, batch)
+    cfg2 = dataclasses.replace(
+        cfg, policy=dataclasses.replace(cfg.policy, scan_layers=False)
+    )
+    l2, _ = M.forward(params, cfg2, batch)
+    # bf16 activations: scan/unroll reassociate sums -> ~0.04 logit jitter
+    np.testing.assert_allclose(
+        np.asarray(l1.astype(jnp.float32)), np.asarray(l2.astype(jnp.float32)),
+        atol=0.08,
+    )
+    agree = np.mean(np.asarray(jnp.argmax(l1, -1) == jnp.argmax(l2, -1)))
+    assert agree > 0.95
+
+
+def test_param_count_close_to_reference():
+    """6ND accounting: param_count() should be within 20% of actual leaves."""
+    for arch in ARCH_NAMES:
+        cfg = get_smoke(arch)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        est = cfg.param_count()
+        assert abs(est - actual) / actual < 0.2, (arch, est, actual)

@@ -1,0 +1,102 @@
+"""Head/vocab padding invariants: pad rows are dead weight — garbage in the
+pad slots must not change any output, and pads never win argmax."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import model as M
+from repro.models.config import ParallelismPolicy
+
+
+def _padded_cfg():
+    base = get_smoke("internlm2-1.8b")   # 8 heads, kv 4, vocab 512
+    return dataclasses.replace(
+        base,
+        policy=dataclasses.replace(
+            base.policy, pad_heads_to=12, pad_kv_heads_to=6, pad_vocab_to=520
+        ),
+    )
+
+
+def _poison_pads(params, cfg):
+    """Overwrite pad-head / pad-vocab parameter rows with large garbage."""
+    p = jax.tree.map(lambda a: a, params)  # shallow copy
+    for blk in p["blocks"]:
+        core = blk["core"]
+        # stacked leading (R,) axis: wq (R, d, hq_eff, hd), wo (R, hq_eff, hd, d)
+        core["wq"] = core["wq"].at[..., cfg.n_heads:, :].set(37.0)
+        core["wo"] = core["wo"].at[:, cfg.n_heads:].set(37.0)
+    p["embed"] = p["embed"].at[cfg.vocab_size:, :].set(37.0)
+    p["lm_head"] = p["lm_head"].at[:, cfg.vocab_size:].set(37.0)
+    return p
+
+
+def test_pad_slots_do_not_affect_outputs(rng, key):
+    cfg = _padded_cfg()
+    params = M.init_params(key, cfg)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32),
+    }
+    logits1, _ = M.forward(params, cfg, batch)
+    logits2, _ = M.forward(_poison_pads(params, cfg), cfg, batch)
+    np.testing.assert_allclose(
+        np.asarray(logits1[..., : cfg.vocab_size].astype(jnp.float32)),
+        np.asarray(logits2[..., : cfg.vocab_size].astype(jnp.float32)),
+        atol=1e-3,
+    )
+
+
+def test_pad_vocab_never_wins_argmax(rng, key):
+    cfg = _padded_cfg()
+    params = M.init_params(key, cfg)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)}
+    logits, _, _ = M.prefill(params, cfg, batch, cache_len=18)
+    assert logits.shape[-1] == cfg.vocab_eff == 520
+    assert int(jnp.argmax(logits, -1).max()) < cfg.vocab_size
+
+
+def test_pad_heads_get_zero_gradient(rng, key):
+    cfg = _padded_cfg()
+    params = M.init_params(key, cfg)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32),
+    }
+    grads = jax.grad(lambda p: M.loss_fn(p, cfg, batch)[0])(params)
+    for blk in grads["blocks"]:
+        gq = np.asarray(blk["core"]["wq"])           # (R, d, hq_eff, hd)
+        assert np.abs(gq[..., cfg.n_heads:, :]).max() == 0.0
+        go = np.asarray(blk["core"]["wo"])           # (R, hq_eff, hd, d)
+        assert np.abs(go[:, cfg.n_heads:]).max() == 0.0
+    ge = np.asarray(grads["embed"])
+    assert np.abs(ge[cfg.vocab_size:]).max() == 0.0
+
+
+def test_padded_train_loss_finite_and_decreasing(rng, key):
+    from repro.optim import adamw
+    cfg = _padded_cfg()
+    params = M.init_params(key, cfg)
+    opt = adamw.init(params)
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32),
+    }
+
+    @jax.jit
+    def step(params, opt):
+        (loss, _), g = jax.value_and_grad(M.loss_fn, has_aux=True)(params, cfg, batch)
+        params, opt, _ = adamw.update(ocfg, g, opt, params)
+        return params, opt, loss
+
+    losses = []
+    for _ in range(3):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert all(np.isfinite(losses)) and losses[-1] < losses[0]

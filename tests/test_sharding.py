@@ -1,0 +1,135 @@
+"""Sharding rules: fit_pspec properties + full-tree spec coverage."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config, get_smoke
+from repro.models import model as M
+from repro.parallel import sharding as sh
+
+
+class FakeMesh:
+    """Shape-only stand-in (fit_pspec/param_specs never touch devices)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _prod(axes):
+    out = 1
+    for a in axes:
+        out *= MESH.shape[a]
+    return out
+
+
+def test_fit_keeps_divisible():
+    assert sh.fit_pspec(P("data", "model"), (32, 64), MESH) == P("data", "model")
+
+
+def test_fit_rehomes_to_free_dim():
+    # kv=8 cannot take model=16 -> moves to head_dim=128 (dim0 is occupied)
+    got = sh.fit_pspec(P("data", "model", None), (4096, 8, 128), MESH)
+    assert got == P("data", None, "model")
+    # with dim0 free, first-fit re-homes there instead — still legal
+    got2 = sh.fit_pspec(P(None, "model", None), (4096, 8, 128), MESH)
+    assert got2 == P("model", None, None)
+
+
+def test_fit_drops_when_nothing_fits():
+    got = sh.fit_pspec(P("model",), (7,), MESH)
+    assert got == P(None)
+
+
+def test_fit_multi_axis_entry():
+    got = sh.fit_pspec(P(("pod", "data"), None), (64, 10), MESH3)
+    assert got == P(("pod", "data"), None)
+    # dim0=10 keeps 'pod' (2 | 10); 'data' re-homes to dim1 (16 | 64)
+    got2 = sh.fit_pspec(P(("pod", "data"), None), (10, 64), MESH3)
+    assert got2 == P("pod", "data")
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    dims=hst.lists(hst.integers(1, 512), min_size=1, max_size=4),
+    seed=hst.integers(0, 2**31 - 1),
+)
+def test_fit_always_legal(dims, seed):
+    """Post-fit, every sharded dim divides the product of its axes."""
+    rng = np.random.default_rng(seed)
+    names = ["data", "model", "pod"]
+    entries = [
+        None if rng.random() < 0.4 else names[rng.integers(0, 3)]
+        for _ in dims
+    ]
+    # dedupe axis usage
+    seen = set()
+    for i, e in enumerate(entries):
+        if e in seen:
+            entries[i] = None
+        elif e is not None:
+            seen.add(e)
+    spec = P(*entries)
+    got = sh.fit_pspec(spec, tuple(dims), MESH3)
+    used = set()
+    for size, entry in zip(dims, tuple(got) + (None,) * (len(dims) - len(got))):
+        axes = (
+            () if entry is None
+            else (entry,) if isinstance(entry, str) else tuple(entry)
+        )
+        prod = 1
+        for a in axes:
+            assert a not in used
+            used.add(a)
+            prod *= MESH3.shape[a]
+        assert size % prod == 0, (size, axes)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_specs_cover_and_divide(arch):
+    """Every param leaf gets a legal spec on the production mesh shape."""
+    cfg = get_config(arch)
+    params = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    specs = sh.param_specs(params, cfg, MESH)
+    leaves_p = jax.tree.leaves(params)
+    leaves_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_p) == len(leaves_s)
+    for leaf, spec in zip(leaves_p, leaves_s):
+        for size, entry in zip(leaf.shape, tuple(spec)):
+            axes = (
+                () if entry is None
+                else (entry,) if isinstance(entry, str) else tuple(entry)
+            )
+            prod = 1
+            for a in axes:
+                prod *= MESH.shape[a]
+            assert size % prod == 0, (arch, leaf.shape, spec)
+
+
+def test_dp_axes_for_fallbacks():
+    assert sh.dp_axes_for(256, MESH3) == ("pod", "data")
+    assert sh.dp_axes_for(16, MESH3) == ("data",)
+    assert sh.dp_axes_for(1, MESH3) == ()
+    assert sh.dp_axes_for(512, MESH3, dp_only=True) == ("pod", "data", "model")
+    assert sh.dp_axes_for(256, MESH, dp_only=True) == ("data", "model")
+    assert sh.dp_axes_for(128, MESH, dp_only=True) == ("data",)
+
+
+def test_cache_specs_decode_vs_long(arch="minitron-8b"):
+    cfg = get_config(arch)
+    caches = jax.eval_shape(lambda: M.init_caches(cfg, 128, 1024))
+    specs = sh.cache_specs(caches, cfg, MESH, 128)
+    kv = specs[0]["k"]
+    assert kv[1] == "data"           # batch takes DP
+    # B=1: batch axes move to the cache seq dim
+    caches1 = jax.eval_shape(lambda: M.init_caches(cfg, 1, 4096))
+    specs1 = sh.cache_specs(caches1, cfg, MESH, 1)
+    kv1 = specs1[0]["k"]
+    assert kv1[1] is None and kv1[2] == "data"
