@@ -47,7 +47,41 @@ def main() -> None:
         wd, _ = ref.brute_knn(q[:4], x[:2048], k)
         ok = bool(np.allclose(np.asarray(gd), np.asarray(wd), atol=1e-4))
         csv.row("brute_knn", f"B={b} N={n} d={d} k={k}", f"{t*1e6/b:.1f}", ok)
+
+    bench_search_backends(rng, csv)
     return csv
+
+
+def bench_search_backends(rng, csv: Csv) -> None:
+    """End-to-end active search: per-query vmap path vs the batched
+    kernel-backed pipeline (core/batched.py).  On CPU the pallas backend runs
+    interpret-mode, so its ABSOLUTE time is not hardware-meaningful — the row
+    pairs exist so the same sweep on a TPU (REPRO_PALLAS_INTERPRET=0) reads
+    out the real speedup; the end-of-row flag re-checks result parity."""
+    from repro.core import active_search as act
+    from repro.core.grid import GridConfig, build_index
+    from repro.core.projection import identity_projection
+
+    k = 11
+    cfg = GridConfig(grid_size=256, tile=16, n_classes=3, window=32,
+                     row_cap=32, r0=10, k_slack=2.0)
+    for n, b in ((20_000, 64), (100_000, 256)):
+        pts = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 3, size=n), jnp.int32)
+        idx = build_index(pts, cfg, identity_projection(pts), labels=labels)
+        q = jnp.asarray(rng.normal(size=(b, 2)), jnp.float32)
+        t_vmap = timeit(
+            lambda: act.search(idx, cfg, q, k, backend="jnp").ids, repeats=3
+        )
+        t_pal = timeit(
+            lambda: act.search(idx, cfg, q, k, backend="pallas").ids,
+            repeats=3, warmup=1,
+        )
+        a = act.search(idx, cfg, q, k, backend="jnp")
+        p = act.search(idx, cfg, q, k, backend="pallas")
+        ok = bool(np.array_equal(np.asarray(a.ids), np.asarray(p.ids)))
+        csv.row("search_vmap_jnp", f"N={n} B={b} k={k}", f"{t_vmap*1e6/b:.1f}", ok)
+        csv.row("search_batched_pallas", f"N={n} B={b} k={k}", f"{t_pal*1e6/b:.1f}", ok)
 
 
 if __name__ == "__main__":

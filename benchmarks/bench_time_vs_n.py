@@ -19,9 +19,15 @@ K = 11
 N_QUERIES = 100
 
 
-def main(grid_size: int = 1024, ns=(1_000, 4_000, 16_000, 64_000, 256_000)) -> None:
+def main(
+    grid_size: int = 1024,
+    ns=(1_000, 4_000, 16_000, 64_000, 256_000),
+    backend: str = "jnp",
+) -> None:
+    """backend="pallas" times the batched kernel pipeline instead of the vmap
+    path (interpret-mode on CPU — compare on TPU for hardware numbers)."""
     rng = np.random.default_rng(0)
-    csv = Csv("n,exact_knn_s,active_search_s,active_build_s,speedup")
+    csv = Csv("n,backend,exact_knn_s,active_search_s,active_build_s,speedup")
     cfg = GridConfig(grid_size=grid_size, tile=16, n_classes=3, window=64,
                      row_cap=64, r0=100, k_slack=2.0)
     q, _ = paper_data(rng, N_QUERIES)
@@ -34,8 +40,10 @@ def main(grid_size: int = 1024, ns=(1_000, 4_000, 16_000, 64_000, 256_000)) -> N
         )
         idx = build_index(pts, cfg, proj, labels=labels)
         t_exact = timeit(lambda: exact.classify(q, pts, labels, K, 3), repeats=3)
-        t_act = timeit(lambda: act.classify(idx, cfg, q, K), repeats=3)
-        csv.row(n, f"{t_exact:.4f}", f"{t_act:.4f}", f"{t_build:.4f}",
+        t_act = timeit(
+            lambda: act.classify(idx, cfg, q, K, backend=backend), repeats=3
+        )
+        csv.row(n, backend, f"{t_exact:.4f}", f"{t_act:.4f}", f"{t_build:.4f}",
                 f"{t_exact / t_act:.2f}")
 
     # derived: paper claims active-search time ~independent of N
@@ -43,4 +51,10 @@ def main(grid_size: int = 1024, ns=(1_000, 4_000, 16_000, 64_000, 256_000)) -> N
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp")
+    ap.add_argument("--grid-size", type=int, default=1024)
+    args = ap.parse_args()
+    main(grid_size=args.grid_size, backend=args.backend)

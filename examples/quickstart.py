@@ -34,10 +34,20 @@ index = build_index(points, cfg, identity_projection(points), labels=labels)
 
 # --- search: zoom around the query, not over the dataset --------------------
 queries = jnp.asarray(rng.normal(size=(5, 2)), jnp.float32)
-res = search(index, cfg, queries, K)          # batched active search
+res = search(index, cfg, queries, K)          # batched active search (jnp path)
 print("neighbor ids[0]  :", np.asarray(res.ids[0]))
 print("distances[0]     :", np.round(np.asarray(res.dists[0]), 4))
 print("Eq.1 radius/iters:", np.asarray(res.radius), np.asarray(res.iters))
+
+# --- same search on the kernel-backed batched pipeline ----------------------
+# backend="pallas" runs the Eq.-1 loop on kernels.tile_count, gathers the CSR
+# window in one batched take, and re-ranks with the fused candidate_topk
+# kernel (interpret-mode on CPU; compiles to Mosaic on TPU with
+# REPRO_PALLAS_INTERPRET=0).  Results are identical to the jnp path.
+res_k = search(index, cfg, queries, K, backend="pallas")
+assert np.array_equal(np.asarray(res.ids), np.asarray(res_k.ids))
+assert np.array_equal(np.asarray(res.dists), np.asarray(res_k.dists))
+print("pallas backend   : identical ids/dists ✓")
 
 # --- classify like the paper's Fig. 2 (argmax of per-class circle counts) ---
 pred_paper = classify(index, cfg, queries, K, mode="paper")

@@ -53,17 +53,12 @@ def _metric_dist(a: jax.Array, b: jax.Array, metric: str) -> jax.Array:
     return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
 
 
-def gather_candidates(index: GridIndex, cfg: GridConfig, q_grid: jax.Array) -> Candidates:
-    """Fixed-shape CSR gather of the window around the query cell.
+def padded_csr(index: GridIndex, rcap: int):
+    """CSR record arrays padded so a row_cap slice is always in bounds.
 
-    Window rows are contiguous spans of the CSR arrays (row-major cell ids),
-    so each row costs one dynamic_slice of `row_cap` records.
+    Returns (points, coords, labels, ids, n, n_pad); pad ids are -1.
     """
-    g = cfg.padded_size
-    w, rcap = cfg.window, cfg.row_cap
-    n, d = index.points_sorted.shape
-
-    # pad the CSR arrays so a row_cap slice is always in bounds
+    n = index.points_sorted.shape[0]
     pad = max(rcap - n, 0)
     if pad:
         pts = jnp.pad(index.points_sorted, ((0, pad), (0, 0)))
@@ -77,16 +72,38 @@ def gather_candidates(index: GridIndex, cfg: GridConfig, q_grid: jax.Array) -> C
             index.labels_sorted,
             index.ids_sorted,
         )
-    n_pad = n + pad
+    return pts, crd, lab, ids, n, n + pad
 
-    cx = jnp.floor(q_grid[0]).astype(jnp.int32)
-    cy = jnp.floor(q_grid[1]).astype(jnp.int32)
+
+def window_spans(index: GridIndex, cfg: GridConfig, q_grid: jax.Array):
+    """CSR [start, end) spans of the w window rows around each query cell.
+
+    q_grid (..., 2) -> start, end (..., w) — shape-polymorphic, so the same
+    math serves the per-query path (q_grid (2,)) and the batched path
+    (q_grid (B, 2), core/batched.py).
+    """
+    g = cfg.padded_size
+    w = cfg.window
+    cx = jnp.floor(q_grid[..., 0]).astype(jnp.int32)
+    cy = jnp.floor(q_grid[..., 1]).astype(jnp.int32)
     x0 = jnp.clip(cx - w // 2, 0, g - w)
     y0 = jnp.clip(cy - w // 2, 0, g - w)
+    rows = x0[..., None] + jnp.arange(w, dtype=jnp.int32)   # (..., w)
+    start = index.offsets[rows * g + y0[..., None]]          # (..., w)
+    end = index.offsets[rows * g + (y0[..., None] + w)]      # (..., w)
+    return start, end
 
-    rows = x0 + jnp.arange(w, dtype=jnp.int32)              # (w,)
-    start = index.offsets[rows * g + y0]                     # (w,)
-    end = index.offsets[rows * g + (y0 + w)]                 # (w,)
+
+def gather_candidates(index: GridIndex, cfg: GridConfig, q_grid: jax.Array) -> Candidates:
+    """Fixed-shape CSR gather of the window around the query cell.
+
+    Window rows are contiguous spans of the CSR arrays (row-major cell ids),
+    so each row costs one dynamic_slice of `row_cap` records.
+    """
+    w, rcap = cfg.window, cfg.row_cap
+    d = index.points_sorted.shape[1]
+    pts, crd, lab, ids, n, n_pad = padded_csr(index, rcap)
+    start, end = window_spans(index, cfg, q_grid)            # (w,), (w,)
 
     def per_row(s, e):
         s_cl = jnp.clip(s, 0, max(n_pad - rcap, 0))
@@ -161,23 +178,42 @@ def search_one(
 
 
 @partial(jax.jit, static_argnames=("cfg", "k", "mode"))
-def search(
+def _search_jnp(
     index: GridIndex, cfg: GridConfig, queries: jax.Array, k: int, mode: str = "refined"
 ) -> SearchResult:
-    """Batched active search: queries (B, d) -> SearchResult with leading B."""
     return jax.vmap(lambda q: search_one(index, cfg, q, k, mode))(queries)
 
 
+def search(
+    index: GridIndex,
+    cfg: GridConfig,
+    queries: jax.Array,
+    k: int,
+    mode: str = "refined",
+    backend: str = "jnp",
+) -> SearchResult:
+    """Batched active search: queries (B, d) -> SearchResult with leading B.
+
+    backend="jnp":    per-query pipeline under vmap (pure lax/jnp; reference).
+    backend="pallas": batched kernel-backed pipeline (core/batched.py) —
+                      tile_count radius loop, one-shot CSR gather, fused
+                      candidate_topk re-rank.  Interpret-mode on CPU
+                      (REPRO_PALLAS_INTERPRET=1, default), Mosaic on TPU.
+    Results are identical across backends (tests/test_batched_backend.py).
+    """
+    if backend == "pallas":
+        from repro.core import batched
+
+        return batched.search(index, cfg, queries, k, mode=mode)
+    if backend != "jnp":
+        raise ValueError(f"unknown backend {backend!r}; expected 'jnp' or 'pallas'")
+    return _search_jnp(index, cfg, queries, k, mode)
+
+
 @partial(jax.jit, static_argnames=("cfg", "k", "mode"))
-def classify(
+def _classify_jnp(
     index: GridIndex, cfg: GridConfig, queries: jax.Array, k: int, mode: str = "refined"
 ) -> jax.Array:
-    """kNN classification.
-
-    mode="paper":   argmax of per-class counts inside the final circle — pure
-                    count comparison on the class channels, exactly Fig. 2.
-    mode="refined": majority vote over the refined top-k labels.
-    """
     if cfg.n_classes <= 0:
         raise ValueError("classify() needs an index built with n_classes > 0")
 
@@ -210,3 +246,27 @@ def classify(
     fallback = jax.vmap(count_pred)(queries, res.radius)
     short = jnp.sum(res.valid.astype(jnp.int32), axis=1) < k
     return jnp.where(short | res.truncated, fallback, refined)
+
+
+def classify(
+    index: GridIndex,
+    cfg: GridConfig,
+    queries: jax.Array,
+    k: int,
+    mode: str = "refined",
+    backend: str = "jnp",
+) -> jax.Array:
+    """kNN classification.
+
+    mode="paper":   argmax of per-class counts inside the final circle — pure
+                    count comparison on the class channels, exactly Fig. 2.
+    mode="refined": majority vote over the refined top-k labels.
+    backend: "jnp" (vmap reference) or "pallas" (kernel-backed, core/batched.py).
+    """
+    if backend == "pallas":
+        from repro.core import batched
+
+        return batched.classify(index, cfg, queries, k, mode=mode)
+    if backend != "jnp":
+        raise ValueError(f"unknown backend {backend!r}; expected 'jnp' or 'pallas'")
+    return _classify_jnp(index, cfg, queries, k, mode)

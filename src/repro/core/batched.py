@@ -1,0 +1,295 @@
+"""Batched, kernel-backed active search — the Pallas execution path.
+
+The jnp path (`active_search.py`) runs the paper's per-query loop under
+`vmap`: each query separately counts circles via `lax.switch` over pyramid
+levels, gathers its CSR window row-by-row, and ranks with `lax.top_k`.  This
+module executes the SAME algorithm batch-at-a-time on the purpose-built
+Pallas kernels so the hot path is MXU/VPU-shaped:
+
+  1. Eq.-1 radius adaptation for the whole batch via `kernels.ops.tile_count`
+     (one pallas_call per pyramid level per iteration, data-dependent window
+     origins scalar-prefetched), with per-query level selection done by a
+     take_along_axis over the (L, B, C) level stack;
+  2. the CSR window gather as ONE batched (B, w*row_cap) advanced-index
+     gather instead of B*w dynamic_slices;
+  3. re-ranking with the fused `kernels.ops.candidate_topk` distance+top-k
+     kernel (interpret-mode on CPU, Mosaic on TPU) instead of per-query
+     `lax.top_k`.
+
+Semantics are bit-for-bit identical to the jnp path (the kernels share their
+oracles' contracts; see tests/test_batched_backend.py).  Entry points mirror
+`active_search.search` / `.classify` and are selected there via
+`backend="pallas"`.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projection as proj_lib
+from repro.core import pyramid as pyr
+from repro.core.active_search import (
+    Candidates,
+    SearchResult,
+    _metric_dist,
+    padded_csr,
+    window_spans,
+)
+from repro.core.grid import GridConfig, GridIndex
+from repro.kernels import ops
+
+
+# --------------------------------------------------------------- counting ----
+
+
+def batched_counts(
+    index: GridIndex, cfg: GridConfig, q_grid: jax.Array, radii: jax.Array
+) -> jax.Array:
+    """Per-class circle counts (B, C) for a batch of queries/radii.
+
+    Pyramid counter: run `ops.tile_count` over EVERY level (the level is
+    data-dependent per query, but `scale` is a static kernel parameter), then
+    select each query's row from the (L, B, C) stack at its
+    `level_for_radius`.  L = cfg.levels is O(log G/T), so the overcount
+    factor is small and every pass is a single batched pallas_call.
+    """
+    if cfg.counter == "sat":
+        from repro.core import integral as integral_lib
+
+        return jax.vmap(lambda q, r: integral_lib.count_linf(index.sat, q, r))(
+            q_grid, radii
+        )
+
+    levels = pyr.level_for_radius(radii, cfg)  # (B,) int32
+    per_level = jnp.stack(
+        [
+            ops.tile_count(
+                arr, q_grid, radii.astype(jnp.float32), 1 << lv, cfg.tile,
+                metric=cfg.metric,
+            )
+            for lv, arr in enumerate(index.pyramid)
+        ],
+        axis=0,
+    )  # (L, B, C)
+    return jnp.take_along_axis(per_level, levels[None, :, None], axis=0)[0]
+
+
+def radius_search_batched(
+    index: GridIndex, cfg: GridConfig, q_grid: jax.Array, k: int
+) -> dict[str, jax.Array]:
+    """Eq. 1 for a whole batch at once — all (B,) state arrays advance in one
+    `while_loop` whose body is a single kernel-backed count pass.
+
+    Lane-for-lane identical to `vmap(pyramid.radius_search)`: finished lanes
+    freeze (masked update) while the rest keep iterating.
+    """
+    b = q_grid.shape[0]
+    k_hi = jnp.int32(max(k, math.ceil(k * cfg.k_slack)))
+    r_max = jnp.int32(cfg.max_radius)
+    sentinel = r_max + 1
+
+    def cond(state):
+        t, _r, done, _best = state
+        return jnp.any(jnp.logical_and(t < cfg.max_iters, jnp.logical_not(done)))
+
+    def body(state):
+        t, r, done, best = state
+        active = jnp.logical_and(t < cfg.max_iters, jnp.logical_not(done))
+        n = batched_counts(index, cfg, q_grid, r).sum(axis=-1)  # (B,)
+        hit = jnp.logical_and(n >= k, n <= k_hi)
+        best_new = jnp.where(n >= k, jnp.minimum(best, r), best)
+        ratio = jnp.sqrt(k / jnp.maximum(n, 1).astype(jnp.float32))
+        r_new = jnp.round(r.astype(jnp.float32) * ratio).astype(jnp.int32)
+        r_new = jnp.where(n == 0, r * 2, r_new)
+        r_new = jnp.clip(r_new, 1, r_max)
+        r_new = jnp.where(
+            jnp.logical_and(r_new == r, jnp.logical_not(hit)),
+            r + jnp.where(n < k, 1, -1),
+            r_new,
+        )
+        r_next = jnp.where(hit, r, jnp.clip(r_new, 1, r_max))
+        return (
+            jnp.where(active, t + 1, t),
+            jnp.where(active, r_next, r),
+            jnp.where(active, hit, done),
+            jnp.where(active, best_new, best),
+        )
+
+    r0 = jnp.full((b,), jnp.clip(jnp.int32(cfg.r0), 1, r_max), jnp.int32)
+    state0 = (
+        jnp.zeros((b,), jnp.int32),
+        r0,
+        jnp.zeros((b,), bool),
+        jnp.full((b,), sentinel, jnp.int32),
+    )
+    t, r, converged, best = jax.lax.while_loop(cond, body, state0)
+
+    r_final = jnp.where(converged, r, jnp.where(best <= r_max, best, r_max))
+    n_final = batched_counts(index, cfg, q_grid, r_final).sum(axis=-1)
+    return {
+        "radius": r_final,
+        "count": n_final,
+        "iters": t,
+        "converged": converged,
+    }
+
+
+# ----------------------------------------------------------------- gather ----
+
+
+def gather_candidates_batched(
+    index: GridIndex, cfg: GridConfig, q_grid: jax.Array
+) -> Candidates:
+    """CSR window gather for the whole batch as ONE advanced-index gather.
+
+    Same span math as the per-query path (`active_search.window_spans` /
+    `padded_csr`), but the (B, w, row_cap) index tensor is materialized up
+    front so the candidate records come back in a single (B, w*row_cap)
+    gather per field.
+    """
+    w, rcap = cfg.window, cfg.row_cap
+    b = q_grid.shape[0]
+    pts, crd, lab, ids, n, n_pad = padded_csr(index, rcap)
+    start, end = window_spans(index, cfg, q_grid)                   # (B, w)
+
+    s_cl = jnp.clip(start, 0, max(n_pad - rcap, 0))                 # (B, w)
+    j = s_cl[:, :, None] + jnp.arange(rcap, dtype=jnp.int32)        # (B, w, rcap)
+    ok = (j >= start[:, :, None]) & (j < end[:, :, None]) & (j < n)
+
+    flat = j.reshape(b, w * rcap)
+    return Candidates(
+        points=jnp.take(pts, flat, axis=0),      # (B, w*rcap, d)
+        coords=jnp.take(crd, flat, axis=0),      # (B, w*rcap, 2)
+        labels=jnp.take(lab, flat, axis=0),      # (B, w*rcap)
+        ids=jnp.take(ids, flat, axis=0),         # (B, w*rcap)
+        valid=ok.reshape(b, w * rcap),
+    )
+
+
+# ------------------------------------------------------------------ topk -----
+
+
+def _topk_batched(
+    cand: Candidates,
+    rank_points: jax.Array,   # (B, C, rd) — vectors the kernel ranks by
+    rank_queries: jax.Array,  # (B, rd)
+    k: int,
+    cfg: GridConfig,
+    stats: dict[str, jax.Array],
+    truncated: jax.Array,
+    interpret: bool | None,
+) -> SearchResult:
+    """Fused distance + top-k via `ops.candidate_topk`, then record assembly.
+
+    d_chunk is rounded up to the full feature dim so the kernel reduces each
+    candidate in one accumulation step — bit-identical to the jnp path's
+    single-sum distances (multi-chunk accumulation would reassociate the
+    float32 sum).  On TPU with very large d, cap d_chunk and accept the
+    reassociation.
+    """
+    rd = rank_points.shape[-1]
+    outd, outi = ops.candidate_topk(
+        rank_points,
+        cand.valid,
+        rank_queries,
+        k,
+        metric=cfg.metric,
+        d_chunk=max(rd, 1),
+        interpret=interpret,
+    )
+    sel_valid = jnp.isfinite(outd)
+    idx = jnp.maximum(outi, 0)
+    take = lambda a: jnp.take_along_axis(a, idx, axis=1)
+    return SearchResult(
+        ids=jnp.where(sel_valid, take(cand.ids), -1),
+        dists=outd.astype(jnp.float32),
+        labels=jnp.where(sel_valid, take(cand.labels), -1),
+        valid=sel_valid,
+        radius=stats["radius"],
+        count=stats["count"],
+        iters=stats["iters"],
+        converged=stats["converged"],
+        truncated=truncated,
+    )
+
+
+# -------------------------------------------------------------- entry points -
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "mode", "interpret"))
+def search(
+    index: GridIndex,
+    cfg: GridConfig,
+    queries: jax.Array,
+    k: int,
+    mode: str = "refined",
+    interpret: bool | None = None,
+) -> SearchResult:
+    """Batched kernel-backed active search: queries (B, d) -> SearchResult
+    with leading B.  Same contract as `active_search.search`."""
+    q_grid = proj_lib.to_grid_coords(index.proj, queries, cfg.grid_size)  # (B, 2)
+    stats = radius_search_batched(index, cfg, q_grid, k)
+    r = stats["radius"]
+    truncated = (2 * r + 1) > jnp.int32(cfg.window)
+
+    cand = gather_candidates_batched(index, cfg, q_grid)
+    if mode == "paper":
+        centers = jnp.floor(cand.coords) + 0.5                  # (B, C, 2)
+        gd = _metric_dist(centers, q_grid[:, None, :], cfg.metric)
+        in_circle = gd <= r[:, None].astype(jnp.float32)
+        cand = cand._replace(valid=cand.valid & in_circle)
+        return _topk_batched(
+            cand, centers, q_grid, k, cfg, stats, truncated, interpret
+        )
+
+    return _topk_batched(
+        cand,
+        cand.points,
+        queries.astype(jnp.float32),
+        k,
+        cfg,
+        stats,
+        truncated,
+        interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "mode", "interpret"))
+def classify(
+    index: GridIndex,
+    cfg: GridConfig,
+    queries: jax.Array,
+    k: int,
+    mode: str = "refined",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched kNN classification — same contract as `active_search.classify`,
+    with every count pass going through the tile_count kernel."""
+    if cfg.n_classes <= 0:
+        raise ValueError("classify() needs an index built with n_classes > 0")
+
+    q_grid = proj_lib.to_grid_coords(index.proj, queries, cfg.grid_size)
+
+    if mode == "paper":
+        stats = radius_search_batched(index, cfg, q_grid, k)
+        counts = batched_counts(index, cfg, q_grid, stats["radius"])
+        return jnp.argmax(counts, axis=-1).astype(jnp.int32)
+
+    res = search(index, cfg, queries, k, mode="refined", interpret=interpret)
+
+    def vote(labels, valid):
+        onehot = jax.nn.one_hot(labels, cfg.n_classes, dtype=jnp.float32)
+        return jnp.argmax(jnp.sum(onehot * valid[:, None], axis=0)).astype(jnp.int32)
+
+    refined = jax.vmap(vote)(res.labels, res.valid)
+
+    # same graceful degradation as the jnp path, but counted by the kernel
+    fallback = jnp.argmax(
+        batched_counts(index, cfg, q_grid, res.radius), axis=-1
+    ).astype(jnp.int32)
+    short = jnp.sum(res.valid.astype(jnp.int32), axis=1) < k
+    return jnp.where(short | res.truncated, fallback, refined)

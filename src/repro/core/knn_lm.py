@@ -30,6 +30,7 @@ class KNNLMConfig:
     k: int = 16
     lam: float = 0.25        # interpolation weight on the kNN distribution
     temperature: float = 1.0  # distance softmax temperature
+    backend: str = "jnp"     # "jnp" | "pallas" — active-search execution path
     grid: GridConfig = dataclasses.field(
         default_factory=lambda: GridConfig(
             grid_size=1024, tile=16, window=32, row_cap=32, r0=8, k_slack=4.0
@@ -51,7 +52,8 @@ def knn_logprobs(
     index: GridIndex, cfg: KNNLMConfig, hidden: jax.Array, vocab_size: int
 ) -> jax.Array:
     """log p_knn over the vocab.  hidden: (B, d) -> (B, vocab)."""
-    res = act.search(index, cfg.grid, hidden, cfg.k, mode="refined")
+    res = act.search(index, cfg.grid, hidden, cfg.k, mode="refined",
+                     backend=cfg.backend)
     w = jnp.where(res.valid, -res.dists / cfg.temperature, -jnp.inf)
     w = jax.nn.softmax(w, axis=-1)                    # (B, k)
     w = jnp.where(res.valid, w, 0.0)

@@ -153,6 +153,11 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--knn", action="store_true", help="enable the kNN-LM head")
     ap.add_argument("--datastore-size", type=int, default=8192)
+    ap.add_argument(
+        "--knn-backend", choices=["jnp", "pallas"], default="jnp",
+        help="active-search path: vmap reference or batched Pallas kernels "
+             "(interpret-mode on CPU; Mosaic with REPRO_PALLAS_INTERPRET=0)",
+    )
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)
@@ -160,14 +165,15 @@ def main() -> None:
     params = M.init_params(jax.random.PRNGKey(0), cfg)
 
     rng = np.random.default_rng(0)
-    knn_cfg = knn_lm.KNNLMConfig() if args.knn else None
+    knn_cfg = knn_lm.KNNLMConfig(backend=args.knn_backend) if args.knn else None
     datastore = None
     if args.knn:
         corpus = rng.integers(
             0, cfg.vocab_size, size=(args.datastore_size // 64, 65), dtype=np.int32
         )
         datastore = build_datastore_from_model(cfg, params, corpus, knn_cfg)
-        print(f"[serve] datastore: {datastore.n_points} keys")
+        print(f"[serve] datastore: {datastore.n_points} keys "
+              f"(search backend: {args.knn_backend})")
 
     engine = Engine(cfg, params, mesh, ServeConfig(knn=knn_cfg), datastore)
     prompts = rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len),

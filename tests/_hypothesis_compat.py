@@ -1,0 +1,126 @@
+"""Hypothesis shim: use the real library when installed, else a minimal
+deterministic fallback so the suite still collects and runs.
+
+The fallback reimplements exactly the subset this repo's tests use:
+
+  @settings(max_examples=N, deadline=None)
+  @given(seed=hst.integers(0, 2**31 - 1), k=hst.integers(1, 20), ...)
+
+Draws are deterministic (seeded per example index), so failures reproduce.
+Real hypothesis, when present, wins — shrinking and the full strategy
+language come back for free.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def draw(self, rnd: random.Random):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value=None, max_value=None):
+            self.min_value = -(2**31) if min_value is None else min_value
+            self.max_value = 2**31 - 1 if max_value is None else max_value
+
+        def draw(self, rnd):
+            return rnd.randint(self.min_value, self.max_value)
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=10):
+            self.elements = elements
+            self.min_size = min_size
+            self.max_size = max_size
+
+        def draw(self, rnd):
+            size = rnd.randint(self.min_size, self.max_size)
+            return [self.elements.draw(rnd) for _ in range(size)]
+
+    class _Booleans(_Strategy):
+        def draw(self, rnd):
+            return bool(rnd.randint(0, 1))
+
+    class _Floats(_Strategy):
+        def __init__(self, min_value=0.0, max_value=1.0, **_ignored):
+            self.min_value = min_value
+            self.max_value = max_value
+
+        def draw(self, rnd):
+            return rnd.uniform(self.min_value, self.max_value)
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def draw(self, rnd):
+            return rnd.choice(self.elements)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Lists(elements, min_size=min_size, max_size=max_size)
+
+        @staticmethod
+        def booleans():
+            return _Booleans()
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **kwargs):
+            return _Floats(min_value, max_value, **kwargs)
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledFrom(elements)
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for i in range(n):
+                    rnd = random.Random(0xA5EED + i)
+                    drawn = {
+                        name: strat.draw(rnd)
+                        for name, strat in strategy_kwargs.items()
+                    }
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:  # attach the failing example
+                        raise AssertionError(
+                            f"falsifying example (compat shim, example {i}): {drawn}"
+                        ) from e
+
+            # hide the drawn parameters from pytest's fixture resolution:
+            # only NON-strategy params (real fixtures like `rng`) remain.
+            sig = inspect.signature(fn)
+            params = [
+                p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs
+            ]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

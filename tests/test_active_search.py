@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hypothesis_compat import given, settings, strategies as hst
 
 from repro.core import active_search as act
 from repro.core import exact

@@ -13,6 +13,7 @@ from repro.launch import ft
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import TrainConfig, run, train_loop
 
+pytestmark = pytest.mark.slow  # full model/system drills; fast tier skips
 
 def test_step_timer_flags_stragglers():
     t = ft.StepTimer(threshold=2.0, warmup=2)

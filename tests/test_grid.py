@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hypothesis_compat import given, settings, strategies as hst
 
 from repro.core import grid as G
 from repro.core import projection as proj_lib

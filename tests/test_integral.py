@@ -3,7 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as hst
+from _hypothesis_compat import given, settings, strategies as hst
 
 from repro.core import exact, integral
 from repro.core import active_search as act

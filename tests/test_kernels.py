@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hypothesis_compat import given, settings, strategies as hst
 
 from repro.kernels import ops, ref
 
@@ -101,6 +101,68 @@ def test_candidate_topk_all_invalid(rng):
     gd, gi = ops.candidate_topk(cand, valid, q, 3, interpret=True)
     assert bool(jnp.all(jnp.isinf(gd)))
     assert bool(jnp.all(gi == -1))
+
+
+def test_candidate_topk_c_smaller_than_k(rng):
+    """k exceeds the candidate count: the first C slots match the k=C oracle,
+    the rest pad with +inf / -1 (the batched backend relies on this)."""
+    b, c, d, k = 3, 5, 6, 9
+    cand = jnp.asarray(rng.normal(size=(b, c, d)), jnp.float32)
+    valid = jnp.ones((b, c), bool)
+    q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    gd, gi = ops.candidate_topk(cand, valid, q, k, interpret=True)
+    wd, wi = ref.candidate_topk(cand, valid, q, c)  # oracle at k=C
+    np.testing.assert_allclose(np.asarray(gd[:, :c]), np.asarray(wd),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(gi[:, :c]), np.asarray(wi))
+    assert bool(jnp.all(jnp.isinf(gd[:, c:])))
+    assert bool(jnp.all(gi[:, c:] == -1))
+
+
+def test_candidate_topk_partially_invalid_fewer_than_k(rng):
+    """Fewer VALID candidates than k: invalid slots never leak into the top-k."""
+    b, c, d, k = 2, 16, 4, 8
+    cand = jnp.asarray(rng.normal(size=(b, c, d)), jnp.float32)
+    valid = jnp.zeros((b, c), bool).at[:, :3].set(True)  # only 3 valid
+    q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    gd, gi = ops.candidate_topk(cand, valid, q, k, interpret=True)
+    wd, wi = ref.candidate_topk(cand, valid, q, k)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    assert bool(jnp.all(gi[:, 3:] == -1))
+
+
+def test_tile_count_zero_radius(rng):
+    """r=0: only a cell whose center coincides with the query could count."""
+    s, tile = 32, 8
+    level = jnp.asarray(rng.integers(0, 3, size=(s, s, 2)), jnp.int32)
+    q = jnp.asarray([[10.5, 20.5], [3.0, 7.0]], jnp.float32)  # on/off centers
+    r = jnp.zeros((2,), jnp.float32)
+    got = ops.tile_count(level, q, r, 1, tile, interpret=True)
+    want = ref.tile_count(level, q, r, 1, tile)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tile_count_full_pyramid_levels(rng):
+    """Every level of a real pyramid agrees with the oracle at its scale —
+    the exact sweep the batched radius loop performs."""
+    from repro.core.grid import GridConfig, build_index
+    from repro.core.projection import identity_projection
+
+    pts = jnp.asarray(rng.normal(size=(500, 2)), jnp.float32)
+    cfg = GridConfig(grid_size=64, tile=8)
+    idx = build_index(pts, cfg, identity_projection(pts))
+    q = jnp.asarray(rng.uniform(0, cfg.padded_size, size=(7, 2)), jnp.float32)
+    for lv, arr in enumerate(idx.pyramid):
+        scale = 1 << lv
+        r = jnp.asarray(
+            rng.uniform(0.5, scale * (cfg.tile / 2 - 1.5), size=(7,)), jnp.float32
+        )
+        got = ops.tile_count(arr, q, r, scale, cfg.tile, interpret=True)
+        want = ref.tile_count(arr, q, r, scale, cfg.tile)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"level {lv}")
 
 
 # ------------------------------------------------------------- brute_knn ----

@@ -11,6 +11,7 @@ from repro.configs import ARCH_NAMES, get_smoke
 from repro.models import model as M
 from repro.optim import adamw
 
+pytestmark = pytest.mark.slow  # full model/system drills; fast tier skips
 
 def _batch(cfg, rng, b=2, s=32):
     batch = {

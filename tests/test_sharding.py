@@ -3,7 +3,7 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hypothesis_compat import given, settings, strategies as hst
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke

@@ -14,6 +14,7 @@ from repro.launch.serve import Engine, ServeConfig, build_datastore_from_model
 from repro.core import knn_lm
 from repro.models import model as M
 
+pytestmark = pytest.mark.slow  # full model/system drills; fast tier skips
 
 def test_paper_pipeline_accuracy(rng):
     """The paper's §3 setup at reduced scale: random 2-D points, 3 classes,
