@@ -1,8 +1,23 @@
 """Kernel microbench: the pure-JAX reference paths (what actually executes on
 CPU) timed across sizes, plus one interpret-mode validation per Pallas kernel
-(interpret=True timings are NOT hardware-meaningful — correctness only)."""
+(interpret=True timings are NOT hardware-meaningful — correctness only).
+
+The stacked-vs-level-scheduled counting comparison IS meaningful on CPU
+interpret: both paths pay the same per-program emulation cost, so the ratio
+reflects the kernel-invocation count (L stacked passes vs one scheduled
+pass).  Results land in BENCH_kernels.json (see REPRO_BENCH_ARTIFACTS) so CI
+records the perf trajectory.
+
+Env knobs:
+  REPRO_BENCH_QUICK=1      shrink sweeps to CI-friendly sizes
+  REPRO_BENCH_ARTIFACTS=D  directory for BENCH_kernels.json (default ".")
+"""
 
 from __future__ import annotations
+
+import json
+import os
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -11,12 +26,18 @@ from benchmarks.common import Csv, timeit
 from repro.kernels import ops, ref
 
 
+def _quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+
 def main() -> None:
     rng = np.random.default_rng(0)
     csv = Csv("kernel,config,ref_us_per_call,pallas_interpret_ok")
+    results: dict = {"schema": 1, "timestamp": time.time(), "quick": _quick()}
 
     # tile_count: one pyramid-level circle count
-    for s, tile, c in ((256, 16, 1), (1024, 16, 4)):
+    sizes = ((256, 16, 1),) if _quick() else ((256, 16, 1), (1024, 16, 4))
+    for s, tile, c in sizes:
         level = jnp.asarray(rng.integers(0, 4, size=(s, s, c)), jnp.int32)
         q = jnp.asarray(rng.uniform(0, s, size=(64, 2)), jnp.float32)
         r = jnp.asarray(rng.uniform(1, tile / 2 - 1.5, size=(64,)), jnp.float32)
@@ -28,7 +49,9 @@ def main() -> None:
         csv.row("tile_count", f"S={s} T={tile} C={c} B=64", f"{t*1e6/64:.1f}", ok)
 
     # candidate_topk: post-gather re-rank
-    for b, c, d, k in ((64, 256, 64, 16), (256, 1024, 128, 16)):
+    shapes = ((64, 256, 64, 16),) if _quick() else \
+        ((64, 256, 64, 16), (256, 1024, 128, 16))
+    for b, c, d, k in shapes:
         cand = jnp.asarray(rng.normal(size=(b, c, d)), jnp.float32)
         valid = jnp.asarray(rng.uniform(size=(b, c)) > 0.2)
         q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
@@ -39,7 +62,9 @@ def main() -> None:
         csv.row("candidate_topk", f"B={b} C={c} d={d} k={k}", f"{t*1e6/b:.1f}", ok)
 
     # brute_knn: the paper's baseline
-    for b, n, d, k in ((100, 10_000, 2, 11), (100, 100_000, 2, 11)):
+    brute = ((100, 10_000, 2, 11),) if _quick() else \
+        ((100, 10_000, 2, 11), (100, 100_000, 2, 11))
+    for b, n, d, k in brute:
         q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
         x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
         t = timeit(lambda: ref.brute_knn(q, x, k), repeats=3)
@@ -48,11 +73,78 @@ def main() -> None:
         ok = bool(np.allclose(np.asarray(gd), np.asarray(wd), atol=1e-4))
         csv.row("brute_knn", f"B={b} N={n} d={d} k={k}", f"{t*1e6/b:.1f}", ok)
 
-    bench_search_backends(rng, csv)
+    results["count_paths"] = bench_count_paths(rng, csv)
+    if not _quick():
+        results["search_backends"] = bench_search_backends(rng, csv)
+
+    art_dir = os.environ.get("REPRO_BENCH_ARTIFACTS", ".")
+    path = os.path.join(art_dir, "BENCH_kernels.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"[bench_kernels] wrote {path}", flush=True)
     return csv
 
 
-def bench_search_backends(rng, csv: Csv) -> None:
+def bench_count_paths(rng, csv: Csv) -> dict:
+    """Stacked (L x tile_count + select) vs level-scheduled
+    (tile_count_multilevel) counting — the Eq.-1 loop body.
+
+    Config note: the CPU interpreter charges every grid program a copy of
+    every operand (the operands ride in its while_loop carry), a cost real
+    hardware does not pay — on TPU the index_map DMAs only the addressed
+    (T, T, C) blocks.  A VMEM-scale pyramid keeps that artifact small, so
+    the ratio below reflects what the scheduler actually removes: L
+    pallas_calls-worth of programs per Eq.-1 iteration vs one."""
+    from repro.core import batched, projection as proj_lib
+    from repro.core.grid import GridConfig, build_index
+    from repro.core.projection import identity_projection
+
+    # same config in quick mode: smaller sweeps time too few programs to
+    # measure reliably, and this one still finishes in seconds
+    b, grid, tile = 128, 128, 8
+    cfg = GridConfig(grid_size=grid, tile=tile, window=32,
+                     row_cap=32, r0=10, k_slack=2.0)
+    n = 5_000
+    pts = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    idx = build_index(pts, cfg, identity_projection(pts))
+    q = jnp.asarray(rng.normal(size=(b, 2)), jnp.float32)
+    qg = proj_lib.to_grid_coords(idx.proj, q, cfg.grid_size)
+    radii = jnp.asarray(rng.integers(1, cfg.max_radius, size=b), jnp.int32)
+
+    # one pass is only ~5-15 ms, so generous repeats keep the median stable
+    # against scheduler noise at negligible cost
+    t_stack = timeit(
+        lambda: batched.batched_counts_stacked(idx, cfg, qg, radii, True),
+        repeats=25, warmup=3,
+    )
+    t_multi = timeit(
+        lambda: batched.batched_counts(idx, cfg, qg, radii, True),
+        repeats=25, warmup=3,
+    )
+    parity = bool(np.array_equal(
+        np.asarray(batched.batched_counts(idx, cfg, qg, radii, True)),
+        np.asarray(batched.batched_counts_stacked(idx, cfg, qg, radii, True)),
+    ))
+    out = {
+        "levels": cfg.levels,
+        "batch": b,
+        "grid_size": grid,
+        "tile": tile,
+        "stacked_counts_per_s": b / t_stack,
+        "level_scheduled_counts_per_s": b / t_multi,
+        "speedup": t_stack / t_multi,
+        "parity": parity,
+    }
+    csv.row("counts_stacked", f"L={cfg.levels} B={b} G={grid} T={tile}",
+            f"{t_stack*1e6/b:.1f}", parity)
+    csv.row("counts_level_scheduled", f"L={cfg.levels} B={b} G={grid} T={tile}",
+            f"{t_multi*1e6/b:.1f}", parity)
+    print(f"[bench_kernels] level scheduler speedup over stacked "
+          f"(L={cfg.levels}): {out['speedup']:.2f}x", flush=True)
+    return out
+
+
+def bench_search_backends(rng, csv: Csv) -> list[dict]:
     """End-to-end active search: per-query vmap path vs the batched
     kernel-backed pipeline (core/batched.py).  On CPU the pallas backend runs
     interpret-mode, so its ABSOLUTE time is not hardware-meaningful — the row
@@ -63,6 +155,7 @@ def bench_search_backends(rng, csv: Csv) -> None:
     from repro.core.projection import identity_projection
 
     k = 11
+    rows = []
     cfg = GridConfig(grid_size=256, tile=16, n_classes=3, window=32,
                      row_cap=32, r0=10, k_slack=2.0)
     for n, b in ((20_000, 64), (100_000, 256)):
@@ -82,6 +175,9 @@ def bench_search_backends(rng, csv: Csv) -> None:
         ok = bool(np.array_equal(np.asarray(a.ids), np.asarray(p.ids)))
         csv.row("search_vmap_jnp", f"N={n} B={b} k={k}", f"{t_vmap*1e6/b:.1f}", ok)
         csv.row("search_batched_pallas", f"N={n} B={b} k={k}", f"{t_pal*1e6/b:.1f}", ok)
+        rows.append({"n": n, "batch": b, "k": k, "jnp_s": t_vmap,
+                     "pallas_interpret_s": t_pal, "parity": ok})
+    return rows
 
 
 if __name__ == "__main__":

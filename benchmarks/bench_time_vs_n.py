@@ -23,9 +23,11 @@ def main(
     grid_size: int = 1024,
     ns=(1_000, 4_000, 16_000, 64_000, 256_000),
     backend: str = "jnp",
+    chunk_size: int | None = None,
 ) -> None:
     """backend="pallas" times the batched kernel pipeline instead of the vmap
-    path (interpret-mode on CPU — compare on TPU for hardware numbers)."""
+    path (interpret-mode on CPU — compare on TPU for hardware numbers);
+    chunk_size streams queries through fixed-size kernel invocations."""
     rng = np.random.default_rng(0)
     csv = Csv("n,backend,exact_knn_s,active_search_s,active_build_s,speedup")
     cfg = GridConfig(grid_size=grid_size, tile=16, n_classes=3, window=64,
@@ -41,7 +43,9 @@ def main(
         idx = build_index(pts, cfg, proj, labels=labels)
         t_exact = timeit(lambda: exact.classify(q, pts, labels, K, 3), repeats=3)
         t_act = timeit(
-            lambda: act.classify(idx, cfg, q, K, backend=backend), repeats=3
+            lambda: act.classify(idx, cfg, q, K, backend=backend,
+                                 chunk_size=chunk_size),
+            repeats=3,
         )
         csv.row(n, backend, f"{t_exact:.4f}", f"{t_act:.4f}", f"{t_build:.4f}",
                 f"{t_exact / t_act:.2f}")
@@ -56,5 +60,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp")
     ap.add_argument("--grid-size", type=int, default=1024)
+    ap.add_argument("--chunk-size", type=int, default=None)
     args = ap.parse_args()
-    main(grid_size=args.grid_size, backend=args.backend)
+    main(grid_size=args.grid_size, backend=args.backend,
+         chunk_size=args.chunk_size)

@@ -7,6 +7,7 @@
 from __future__ import annotations
 
 import argparse
+import os
 import time
 import traceback
 
@@ -34,7 +35,14 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", nargs="*", default=None,
                     help=f"subset of {[b[0] for b in BENCHES]}")
+    ap.add_argument("--artifacts-dir", default=None,
+                    help="directory for perf artifacts (BENCH_kernels.json); "
+                         "exported to benches as REPRO_BENCH_ARTIFACTS")
     args = ap.parse_args()
+
+    if args.artifacts_dir:
+        os.makedirs(args.artifacts_dir, exist_ok=True)
+        os.environ["REPRO_BENCH_ARTIFACTS"] = args.artifacts_dir
 
     failures = 0
     for name, desc, module in BENCHES:

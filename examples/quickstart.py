@@ -40,10 +40,13 @@ print("distances[0]     :", np.round(np.asarray(res.dists[0]), 4))
 print("Eq.1 radius/iters:", np.asarray(res.radius), np.asarray(res.iters))
 
 # --- same search on the kernel-backed batched pipeline ----------------------
-# backend="pallas" runs the Eq.-1 loop on kernels.tile_count, gathers the CSR
-# window in one batched take, and re-ranks with the fused candidate_topk
-# kernel (interpret-mode on CPU; compiles to Mosaic on TPU with
-# REPRO_PALLAS_INTERPRET=0).  Results are identical to the jnp path.
+# backend="pallas" runs the Eq.-1 loop on the level-scheduled
+# kernels.tile_count_multilevel (one pallas_call per iteration counts every
+# query from its own pyramid level), gathers the CSR window in one batched
+# take, and re-ranks with the fused candidate_topk kernel (interpret-mode on
+# CPU; compiles to Mosaic on TPU with REPRO_PALLAS_INTERPRET=0).  Results
+# are identical to the jnp path; chunk_size= streams big batches through
+# fixed-shape kernel invocations without changing any result.
 res_k = search(index, cfg, queries, K, backend="pallas")
 assert np.array_equal(np.asarray(res.ids), np.asarray(res_k.ids))
 assert np.array_equal(np.asarray(res.dists), np.asarray(res_k.dists))

@@ -53,6 +53,33 @@ def _metric_dist(a: jax.Array, b: jax.Array, metric: str) -> jax.Array:
     return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
 
 
+def run_chunked(fn, queries: jax.Array, chunk_size: int | None):
+    """Stream a batched query pipeline through fixed-size chunks.
+
+    Calls `fn` on (chunk_size, d) slices (the last chunk is padded to full
+    size by repeating its final row, so every kernel invocation keeps ONE
+    static shape / VMEM footprint) and concatenates the per-chunk pytrees.
+    Every query is computed exactly as in the unchunked call — all per-lane
+    state in the pipeline is independent across the batch — so results are
+    bit-identical for any chunk_size.
+    """
+    if chunk_size is not None and chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    b = queries.shape[0]
+    if not chunk_size or b <= chunk_size:
+        return fn(queries)
+    outs = []
+    for i in range(0, b, chunk_size):
+        chunk = queries[i : i + chunk_size]
+        pad = chunk_size - chunk.shape[0]
+        if pad:
+            chunk = jnp.concatenate(
+                [chunk, jnp.broadcast_to(chunk[-1:], (pad,) + chunk.shape[1:])]
+            )
+        outs.append(fn(chunk))
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0)[:b], *outs)
+
+
 def padded_csr(index: GridIndex, rcap: int):
     """CSR record arrays padded so a row_cap slice is always in bounds.
 
@@ -191,23 +218,38 @@ def search(
     k: int,
     mode: str = "refined",
     backend: str = "jnp",
+    interpret: bool | None = None,
+    chunk_size: int | None = None,
 ) -> SearchResult:
     """Batched active search: queries (B, d) -> SearchResult with leading B.
 
     backend="jnp":    per-query pipeline under vmap (pure lax/jnp; reference).
     backend="pallas": batched kernel-backed pipeline (core/batched.py) —
-                      tile_count radius loop, one-shot CSR gather, fused
-                      candidate_topk re-rank.  Interpret-mode on CPU
-                      (REPRO_PALLAS_INTERPRET=1, default), Mosaic on TPU.
+                      level-scheduled tile_count_multilevel radius loop,
+                      one-shot CSR gather, fused candidate_topk re-rank.
+                      Interpret-mode on CPU (REPRO_PALLAS_INTERPRET=1,
+                      default), Mosaic on TPU.
+    interpret:        force/disable Pallas interpret mode (pallas backend
+                      only; None = REPRO_PALLAS_INTERPRET).
+    chunk_size:       stream the batch through fixed-size query chunks so
+                      serve-scale batches keep one static kernel shape /
+                      VMEM footprint.  Bit-identical for any value.
     Results are identical across backends (tests/test_batched_backend.py).
     """
     if backend == "pallas":
         from repro.core import batched
 
-        return batched.search(index, cfg, queries, k, mode=mode)
+        return batched.search(
+            index, cfg, queries, k, mode=mode, interpret=interpret,
+            chunk_size=chunk_size,
+        )
     if backend != "jnp":
         raise ValueError(f"unknown backend {backend!r}; expected 'jnp' or 'pallas'")
-    return _search_jnp(index, cfg, queries, k, mode)
+    if interpret is not None:
+        raise ValueError("interpret= only applies to backend='pallas'")
+    return run_chunked(
+        lambda q: _search_jnp(index, cfg, q, k, mode), queries, chunk_size
+    )
 
 
 @partial(jax.jit, static_argnames=("cfg", "k", "mode"))
@@ -255,6 +297,8 @@ def classify(
     k: int,
     mode: str = "refined",
     backend: str = "jnp",
+    interpret: bool | None = None,
+    chunk_size: int | None = None,
 ) -> jax.Array:
     """kNN classification.
 
@@ -262,11 +306,19 @@ def classify(
                     count comparison on the class channels, exactly Fig. 2.
     mode="refined": majority vote over the refined top-k labels.
     backend: "jnp" (vmap reference) or "pallas" (kernel-backed, core/batched.py).
+    interpret/chunk_size: as in `search`.
     """
     if backend == "pallas":
         from repro.core import batched
 
-        return batched.classify(index, cfg, queries, k, mode=mode)
+        return batched.classify(
+            index, cfg, queries, k, mode=mode, interpret=interpret,
+            chunk_size=chunk_size,
+        )
     if backend != "jnp":
         raise ValueError(f"unknown backend {backend!r}; expected 'jnp' or 'pallas'")
-    return _classify_jnp(index, cfg, queries, k, mode)
+    if interpret is not None:
+        raise ValueError("interpret= only applies to backend='pallas'")
+    return run_chunked(
+        lambda q: _classify_jnp(index, cfg, q, k, mode), queries, chunk_size
+    )

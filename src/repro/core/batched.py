@@ -6,15 +6,22 @@ levels, gathers its CSR window row-by-row, and ranks with `lax.top_k`.  This
 module executes the SAME algorithm batch-at-a-time on the purpose-built
 Pallas kernels so the hot path is MXU/VPU-shaped:
 
-  1. Eq.-1 radius adaptation for the whole batch via `kernels.ops.tile_count`
-     (one pallas_call per pyramid level per iteration, data-dependent window
-     origins scalar-prefetched), with per-query level selection done by a
-     take_along_axis over the (L, B, C) level stack;
+  1. Eq.-1 radius adaptation for the whole batch via the LEVEL-SCHEDULED
+     `kernels.ops.tile_count_multilevel` — ONE pallas_call per iteration
+     that scalar-prefetches each query's (level, window) pair and DMAs its
+     circle from the correct pyramid level of the flattened tile array
+     (GridIndex.pyr_tiles), instead of counting every level and selecting
+     from an (L, B, C) stack (the PR-1 L-fold overcount, kept as
+     `batched_counts_stacked` for benchmarking);
   2. the CSR window gather as ONE batched (B, w*row_cap) advanced-index
      gather instead of B*w dynamic_slices;
   3. re-ranking with the fused `kernels.ops.candidate_topk` distance+top-k
      kernel (interpret-mode on CPU, Mosaic on TPU) instead of per-query
      `lax.top_k`.
+
+`search`/`classify` also take `chunk_size=`: serve-scale batches stream
+through fixed-size kernel invocations (one static shape, bounded VMEM)
+instead of materializing giant per-batch intermediates.
 
 Semantics are bit-for-bit identical to the jnp path (the kernels share their
 oracles' contracts; see tests/test_batched_backend.py).  Entry points mirror
@@ -37,9 +44,10 @@ from repro.core.active_search import (
     SearchResult,
     _metric_dist,
     padded_csr,
+    run_chunked,
     window_spans,
 )
-from repro.core.grid import GridConfig, GridIndex
+from repro.core.grid import GridConfig, GridIndex, flatten_pyramid_tiles
 from repro.kernels import ops
 
 
@@ -47,15 +55,18 @@ from repro.kernels import ops
 
 
 def batched_counts(
-    index: GridIndex, cfg: GridConfig, q_grid: jax.Array, radii: jax.Array
+    index: GridIndex,
+    cfg: GridConfig,
+    q_grid: jax.Array,
+    radii: jax.Array,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Per-class circle counts (B, C) for a batch of queries/radii.
 
-    Pyramid counter: run `ops.tile_count` over EVERY level (the level is
-    data-dependent per query, but `scale` is a static kernel parameter), then
-    select each query's row from the (L, B, C) stack at its
-    `level_for_radius`.  L = cfg.levels is O(log G/T), so the overcount
-    factor is small and every pass is a single batched pallas_call.
+    Pyramid counter: ONE `ops.tile_count_multilevel` pallas_call — each
+    query's `level_for_radius` level and window origin are scalar-prefetched,
+    so every grid program DMAs its circle from the correct pyramid level of
+    the flattened tile array.  No (L, B, C) stack, no L-fold overcount.
     """
     if cfg.counter == "sat":
         from repro.core import integral as integral_lib
@@ -65,11 +76,35 @@ def batched_counts(
         )
 
     levels = pyr.level_for_radius(radii, cfg)  # (B,) int32
+    tiles = index.pyr_tiles
+    if tiles is None:  # index predates the flattened layout — build it here
+        tiles = flatten_pyramid_tiles(index.pyramid, cfg.tile)
+    return ops.tile_count_multilevel(
+        tiles, q_grid, radii.astype(jnp.float32), levels, cfg.tile,
+        cfg.level_nblks, metric=cfg.metric, interpret=interpret,
+    )
+
+
+def batched_counts_stacked(
+    index: GridIndex,
+    cfg: GridConfig,
+    q_grid: jax.Array,
+    radii: jax.Array,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """The PR-1 counting path: `ops.tile_count` over EVERY level, then a
+    take_along_axis select from the (L, B, C) stack.  L-fold more kernel
+    work than `batched_counts`; kept as the benchmark baseline and as a
+    second oracle for the level-scheduled kernel."""
+    if cfg.counter == "sat":
+        return batched_counts(index, cfg, q_grid, radii)
+
+    levels = pyr.level_for_radius(radii, cfg)  # (B,) int32
     per_level = jnp.stack(
         [
             ops.tile_count(
                 arr, q_grid, radii.astype(jnp.float32), 1 << lv, cfg.tile,
-                metric=cfg.metric,
+                metric=cfg.metric, interpret=interpret,
             )
             for lv, arr in enumerate(index.pyramid)
         ],
@@ -79,10 +114,15 @@ def batched_counts(
 
 
 def radius_search_batched(
-    index: GridIndex, cfg: GridConfig, q_grid: jax.Array, k: int
+    index: GridIndex,
+    cfg: GridConfig,
+    q_grid: jax.Array,
+    k: int,
+    interpret: bool | None = None,
 ) -> dict[str, jax.Array]:
     """Eq. 1 for a whole batch at once — all (B,) state arrays advance in one
-    `while_loop` whose body is a single kernel-backed count pass.
+    `while_loop` whose body is a SINGLE level-scheduled tile_count_multilevel
+    call (one pallas_call per iteration, not one per pyramid level).
 
     Lane-for-lane identical to `vmap(pyramid.radius_search)`: finished lanes
     freeze (masked update) while the rest keep iterating.
@@ -99,7 +139,7 @@ def radius_search_batched(
     def body(state):
         t, r, done, best = state
         active = jnp.logical_and(t < cfg.max_iters, jnp.logical_not(done))
-        n = batched_counts(index, cfg, q_grid, r).sum(axis=-1)  # (B,)
+        n = batched_counts(index, cfg, q_grid, r, interpret).sum(axis=-1)  # (B,)
         hit = jnp.logical_and(n >= k, n <= k_hi)
         best_new = jnp.where(n >= k, jnp.minimum(best, r), best)
         ratio = jnp.sqrt(k / jnp.maximum(n, 1).astype(jnp.float32))
@@ -129,7 +169,7 @@ def radius_search_batched(
     t, r, converged, best = jax.lax.while_loop(cond, body, state0)
 
     r_final = jnp.where(converged, r, jnp.where(best <= r_max, best, r_max))
-    n_final = batched_counts(index, cfg, q_grid, r_final).sum(axis=-1)
+    n_final = batched_counts(index, cfg, q_grid, r_final, interpret).sum(axis=-1)
     return {
         "radius": r_final,
         "count": n_final,
@@ -221,7 +261,7 @@ def _topk_batched(
 
 
 @partial(jax.jit, static_argnames=("cfg", "k", "mode", "interpret"))
-def search(
+def _search_impl(
     index: GridIndex,
     cfg: GridConfig,
     queries: jax.Array,
@@ -229,10 +269,8 @@ def search(
     mode: str = "refined",
     interpret: bool | None = None,
 ) -> SearchResult:
-    """Batched kernel-backed active search: queries (B, d) -> SearchResult
-    with leading B.  Same contract as `active_search.search`."""
     q_grid = proj_lib.to_grid_coords(index.proj, queries, cfg.grid_size)  # (B, 2)
-    stats = radius_search_batched(index, cfg, q_grid, k)
+    stats = radius_search_batched(index, cfg, q_grid, k, interpret)
     r = stats["radius"]
     truncated = (2 * r + 1) > jnp.int32(cfg.window)
 
@@ -258,8 +296,30 @@ def search(
     )
 
 
+def search(
+    index: GridIndex,
+    cfg: GridConfig,
+    queries: jax.Array,
+    k: int,
+    mode: str = "refined",
+    interpret: bool | None = None,
+    chunk_size: int | None = None,
+) -> SearchResult:
+    """Batched kernel-backed active search: queries (B, d) -> SearchResult
+    with leading B.  Same contract as `active_search.search`.
+
+    chunk_size streams the batch through fixed-size kernel invocations (one
+    static shape, bounded VMEM) — results are bit-identical for any value.
+    """
+    return run_chunked(
+        lambda q: _search_impl(index, cfg, q, k, mode, interpret),
+        queries,
+        chunk_size,
+    )
+
+
 @partial(jax.jit, static_argnames=("cfg", "k", "mode", "interpret"))
-def classify(
+def _classify_impl(
     index: GridIndex,
     cfg: GridConfig,
     queries: jax.Array,
@@ -267,19 +327,17 @@ def classify(
     mode: str = "refined",
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Batched kNN classification — same contract as `active_search.classify`,
-    with every count pass going through the tile_count kernel."""
     if cfg.n_classes <= 0:
         raise ValueError("classify() needs an index built with n_classes > 0")
 
     q_grid = proj_lib.to_grid_coords(index.proj, queries, cfg.grid_size)
 
     if mode == "paper":
-        stats = radius_search_batched(index, cfg, q_grid, k)
-        counts = batched_counts(index, cfg, q_grid, stats["radius"])
+        stats = radius_search_batched(index, cfg, q_grid, k, interpret)
+        counts = batched_counts(index, cfg, q_grid, stats["radius"], interpret)
         return jnp.argmax(counts, axis=-1).astype(jnp.int32)
 
-    res = search(index, cfg, queries, k, mode="refined", interpret=interpret)
+    res = _search_impl(index, cfg, queries, k, mode="refined", interpret=interpret)
 
     def vote(labels, valid):
         onehot = jax.nn.one_hot(labels, cfg.n_classes, dtype=jnp.float32)
@@ -289,7 +347,26 @@ def classify(
 
     # same graceful degradation as the jnp path, but counted by the kernel
     fallback = jnp.argmax(
-        batched_counts(index, cfg, q_grid, res.radius), axis=-1
+        batched_counts(index, cfg, q_grid, res.radius, interpret), axis=-1
     ).astype(jnp.int32)
     short = jnp.sum(res.valid.astype(jnp.int32), axis=1) < k
     return jnp.where(short | res.truncated, fallback, refined)
+
+
+def classify(
+    index: GridIndex,
+    cfg: GridConfig,
+    queries: jax.Array,
+    k: int,
+    mode: str = "refined",
+    interpret: bool | None = None,
+    chunk_size: int | None = None,
+) -> jax.Array:
+    """Batched kNN classification — same contract as
+    `active_search.classify`, with every count pass going through the
+    level-scheduled tile_count_multilevel kernel."""
+    return run_chunked(
+        lambda q: _classify_impl(index, cfg, q, k, mode, interpret),
+        queries,
+        chunk_size,
+    )

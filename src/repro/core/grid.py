@@ -44,6 +44,18 @@ class GridConfig:
     metric: str = "l2"           # "l2" | "l1" (paper discusses both)
     counter: str = "pyramid"     # "pyramid" | "sat" (exact L-inf counts, integral.py)
 
+    def __post_init__(self):
+        # level_for_radius picks the level where a T-cell window contains the
+        # circle via 2**l >= 2r / (tile - 3); with tile <= 3 the (tile - 3)
+        # margin vanishes and its max(tile - 3, 1) divisor would silently
+        # break the containment guarantee — reject the config outright.
+        if self.tile <= 3:
+            raise ValueError(
+                f"tile={self.tile} is too small: the pyramid window needs a "
+                "positive containment margin (tile/2 - 1.5), so tile must "
+                "be >= 4"
+            )
+
     @property
     def n_channels(self) -> int:
         return max(self.n_classes, 1)
@@ -67,6 +79,12 @@ class GridConfig:
     def max_candidates(self) -> int:
         return self.window * self.row_cap
 
+    @property
+    def level_nblks(self) -> tuple[int, ...]:
+        """Per-level T-block counts S_l // tile — static layout of the
+        flattened tile array consumed by kernels.tile_count_multilevel."""
+        return tuple(1 << (self.levels - 1 - l) for l in range(self.levels))
+
 
 class GridIndex(NamedTuple):
     """The built index.  All arrays; shardable along the points axis (N)."""
@@ -79,6 +97,9 @@ class GridIndex(NamedTuple):
     offsets: jax.Array        # (padded_size**2 + 1,) int32 CSR cell offsets
     pyramid: tuple[jax.Array, ...]  # level l: (S_l, S_l, C) int32, S_l = padded/2**l
     sat: jax.Array | None = None    # (S+1, S+1, C) summed-area table (counter="sat")
+    pyr_tiles: jax.Array | None = None  # (sum_l nblk_l^2, T, T, C) int32 —
+    # the pyramid pre-cut into T-aligned tiles and concatenated level-major
+    # (flatten_pyramid_tiles); the level-scheduled count kernel's input
 
     @property
     def n_points(self) -> int:
@@ -100,6 +121,26 @@ def build_pyramid(base: jax.Array, levels: int) -> tuple[jax.Array, ...]:
         cur = cur.reshape(s, 2, s, 2, cur.shape[-1]).sum(axis=(1, 3))
         out.append(cur)
     return tuple(out)
+
+
+def flatten_pyramid_tiles(pyramid: tuple[jax.Array, ...], tile: int) -> jax.Array:
+    """Flatten a mip chain into one (sum_l nblk_l^2, T, T, C) tile array.
+
+    Level l's (S_l, S_l, C) image becomes nblk_l^2 row-major (T, T, C)
+    tiles (nblk_l = S_l // T); levels are concatenated in order, so tile
+    (bx, by) of level l lives at row offset_l + bx * nblk_l + by.  This is
+    the DMA-friendly layout tile_count_multilevel block-indexes into.
+    """
+    blocks = []
+    for arr in pyramid:
+        s, _, c = arr.shape
+        nb = s // tile
+        blocks.append(
+            arr.reshape(nb, tile, nb, tile, c)
+            .transpose(0, 2, 1, 3, 4)
+            .reshape(nb * nb, tile, tile, c)
+        )
+    return jnp.concatenate(blocks, axis=0)
 
 
 def build_index(
@@ -134,6 +175,7 @@ def build_index(
     chan = jnp.where(cfg.n_classes > 0, labels, 0).astype(jnp.int32)
     base = base.at[cid, chan].add(1)
     base = base.reshape(g, g, c)
+    pyramid = build_pyramid(base, cfg.levels)
 
     return GridIndex(
         proj=proj,
@@ -142,8 +184,14 @@ def build_index(
         labels_sorted=labels[order].astype(jnp.int32),
         ids_sorted=ids[order].astype(jnp.int32),
         offsets=offsets,
-        pyramid=build_pyramid(base, cfg.levels),
+        pyramid=pyramid,
         sat=integral_lib.build_sat(base) if cfg.counter == "sat" else None,
+        # only the pyramid counter's pallas path reads the flat tiling;
+        # batched_counts falls back to building it on the fly when None
+        pyr_tiles=(
+            flatten_pyramid_tiles(pyramid, cfg.tile)
+            if cfg.counter == "pyramid" else None
+        ),
     )
 
 

@@ -31,6 +31,8 @@ class KNNLMConfig:
     lam: float = 0.25        # interpolation weight on the kNN distribution
     temperature: float = 1.0  # distance softmax temperature
     backend: str = "jnp"     # "jnp" | "pallas" — active-search execution path
+    chunk_size: int | None = None  # stream queries through fixed-size search
+    # chunks (bounded kernel VMEM at serve scale); None = whole batch at once
     grid: GridConfig = dataclasses.field(
         default_factory=lambda: GridConfig(
             grid_size=1024, tile=16, window=32, row_cap=32, r0=8, k_slack=4.0
@@ -53,7 +55,7 @@ def knn_logprobs(
 ) -> jax.Array:
     """log p_knn over the vocab.  hidden: (B, d) -> (B, vocab)."""
     res = act.search(index, cfg.grid, hidden, cfg.k, mode="refined",
-                     backend=cfg.backend)
+                     backend=cfg.backend, chunk_size=cfg.chunk_size)
     w = jnp.where(res.valid, -res.dists / cfg.temperature, -jnp.inf)
     w = jax.nn.softmax(w, axis=-1)                    # (B, k)
     w = jnp.where(res.valid, w, 0.0)

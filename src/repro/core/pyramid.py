@@ -29,8 +29,10 @@ def level_for_radius(r: jax.Array, cfg: GridConfig) -> jax.Array:
 
     Worst case (query at a cell edge) the window covers (T/2 - 1.5) level
     cells of radius, so we need 2**l >= 2r / (T - 3).  Guarantees the masked
-    window count equals the full circle count (tests + kernel contract)."""
-    need = 2.0 * r.astype(jnp.float32) / jnp.float32(max(cfg.tile - 3, 1))
+    window count equals the full circle count (tests + kernel contract).
+    GridConfig rejects tile <= 3, so the (T - 3) margin is always positive
+    here."""
+    need = 2.0 * r.astype(jnp.float32) / jnp.float32(cfg.tile - 3)
     l = jnp.ceil(jnp.log2(jnp.maximum(need, 1.0))).astype(jnp.int32)
     return jnp.clip(l, 0, cfg.levels - 1)
 

@@ -15,6 +15,9 @@ from repro.kernels.brute_knn import brute_knn as _brute_knn
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.candidate_topk import candidate_topk as _candidate_topk
 from repro.kernels.tile_count import tile_count as _tile_count
+from repro.kernels.tile_count_multilevel import (
+    tile_count_multilevel as _tile_count_multilevel,
+)
 
 
 def _default_interpret() -> bool:
@@ -25,6 +28,16 @@ def tile_count(level_arr, queries, radii, scale, tile, metric="l2", interpret=No
     interpret = _default_interpret() if interpret is None else interpret
     return _tile_count(
         level_arr, queries, radii, scale, tile, metric=metric, interpret=interpret
+    )
+
+
+def tile_count_multilevel(
+    tiles, queries, radii, levels, tile, nblks, metric="l2", interpret=None
+):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _tile_count_multilevel(
+        tiles, queries, radii, levels, tile, nblks, metric=metric,
+        interpret=interpret,
     )
 
 

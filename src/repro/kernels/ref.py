@@ -41,6 +41,27 @@ def tile_count(
     return jax.vmap(one)(queries.astype(jnp.float32), radii.astype(jnp.float32))
 
 
+def tile_count_multilevel(
+    pyramid: tuple[jax.Array, ...],  # level l: (S_l, S_l, C) int32
+    queries: jax.Array,              # (B, 2) float32, base-pixel units
+    radii: jax.Array,                # (B,) float32, base-pixel units
+    levels: jax.Array,               # (B,) int32 pyramid level per query
+    tile: int,
+    metric: str = "l2",
+) -> jax.Array:
+    """Level-scheduled counts (B, C): each query counted at its OWN pyramid
+    level — the stacked-select oracle for kernels.tile_count_multilevel."""
+    per_level = jnp.stack(
+        [
+            tile_count(arr, queries, radii, 1 << lv, tile, metric=metric)
+            for lv, arr in enumerate(pyramid)
+        ],
+        axis=0,
+    )  # (L, B, C)
+    lv = jnp.clip(levels.astype(jnp.int32), 0, len(pyramid) - 1)
+    return jnp.take_along_axis(per_level, lv[None, :, None], axis=0)[0]
+
+
 def candidate_topk(
     candidates: jax.Array,  # (B, C, d) float32
     valid: jax.Array,       # (B, C) bool

@@ -25,8 +25,45 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def circle_window_sum(
+    vals,   # (T, T, C) int32 — one cover tile's counts
+    bx, by,  # int32 — the tile's block coords (level-cell index / T)
+    qx, qy, r, scale,  # query position, radius (base px), 2**level
+    oxf, oyf,  # float32 — clamped window origin in level cells
+    zero,   # bool — duplicate-cover tile, contribute nothing
+    *,
+    tile: int,
+    metric: str,
+):
+    """Per-class sum of `vals` over cells inside the circle AND the clamped
+    [ox, ox+T) x [oy, oy+T) reference window.
+
+    The single shared definition of the counting contract (both count
+    kernels call it), bit-for-bit with `pyramid._count_at_level`: the
+    window mask keeps circles that overrun the window from reaching cells
+    the oracle never scans, and `zero` blanks aliased duplicate tiles of
+    the 2x2 block cover.  `scale` may be a static int (single-level) or a
+    prefetched float32 scalar (level-scheduled).
+    """
+    ii = jax.lax.broadcasted_iota(jnp.float32, (tile, tile), 0)
+    jj = jax.lax.broadcasted_iota(jnp.float32, (tile, tile), 1)
+    tf = jnp.float32(tile)
+    gx = (bx * tile).astype(jnp.float32) + ii  # global level-cell index
+    gy = (by * tile).astype(jnp.float32) + jj
+    ci = (gx + 0.5) * scale                    # cell center, base px
+    cj = (gy + 0.5) * scale
+    if metric == "l1":
+        inside = (jnp.abs(ci - qx) + jnp.abs(cj - qy)) <= r
+    else:
+        inside = (ci - qx) ** 2 + (cj - qy) ** 2 <= r * r
+    window = (gx >= oxf) & (gx < oxf + tf) & (gy >= oyf) & (gy < oyf + tf)
+    inside = jnp.logical_and(inside & window, jnp.logical_not(zero))
+    return jnp.sum(vals * inside[:, :, None].astype(jnp.int32), axis=(0, 1))
+
+
 def _kernel(
-    origins_ref,  # scalar prefetch: (B, 2) int32 block origins (bx0, by0)
+    origins_ref,  # scalar prefetch: (B, 4) int32 (bx0, by0, ox, oy) —
+                  # block origins + clamped window origin in level cells
     q_ref,        # scalar prefetch: (B, 2) float32 query positions (base px)
     r_ref,        # scalar prefetch: (B,) float32 radii (base px)
     t00, t01, t10, t11,  # (T, T, C) int32 tiles
@@ -40,6 +77,8 @@ def _kernel(
     b = pl.program_id(0)
     bx0 = origins_ref[b, 0]
     by0 = origins_ref[b, 1]
+    oxf = origins_ref[b, 2].astype(jnp.float32)
+    oyf = origins_ref[b, 3].astype(jnp.float32)
     qx = q_ref[b, 0]
     qy = q_ref[b, 1]
     r = r_ref[b]
@@ -49,18 +88,11 @@ def _kernel(
     dup_x = (bx0 + 1) > (nblk - 1)
     dup_y = (by0 + 1) > (nblk - 1)
 
-    ii = jax.lax.broadcasted_iota(jnp.float32, (tile, tile), 0)
-    jj = jax.lax.broadcasted_iota(jnp.float32, (tile, tile), 1)
-
     def masked_sum(t_ref, bx, by, zero):
-        ci = ((bx * tile).astype(jnp.float32) + ii + 0.5) * scale
-        cj = ((by * tile).astype(jnp.float32) + jj + 0.5) * scale
-        if metric == "l1":
-            inside = (jnp.abs(ci - qx) + jnp.abs(cj - qy)) <= r
-        else:
-            inside = (ci - qx) ** 2 + (cj - qy) ** 2 <= r * r
-        inside = jnp.logical_and(inside, jnp.logical_not(zero))
-        return jnp.sum(t_ref[...] * inside[:, :, None].astype(jnp.int32), axis=(0, 1))
+        return circle_window_sum(
+            t_ref[...], bx, by, qx, qy, r, scale, oxf, oyf, zero,
+            tile=tile, metric=metric,
+        )
 
     bx1 = jnp.minimum(bx0 + 1, nblk - 1)
     by1 = jnp.minimum(by0 + 1, nblk - 1)
@@ -87,7 +119,11 @@ def tile_count(
 ) -> jax.Array:
     """Circle-masked counts (B, C) from one pyramid level (S, S, C).
 
-    Contract identical to ref.tile_count (which mirrors pyramid._count_at_level).
+    Contract identical to ref.tile_count (which mirrors
+    pyramid._count_at_level) for EVERY radius: cells outside the clamped
+    [ox, ox+T) x [oy, oy+T) reference window are masked out, so the kernel
+    stays bit-for-bit with the oracle even when the circle overruns the
+    window (radius clamped at the top level, grid-edge queries).
     """
     s, _, c = level_arr.shape
     if s % tile:
@@ -101,7 +137,9 @@ def tile_count(
     cy = jnp.floor(q[:, 1] / scale).astype(jnp.int32)
     ox = jnp.clip(cx - tile // 2, 0, s - tile)
     oy = jnp.clip(cy - tile // 2, 0, s - tile)
-    origins = jnp.stack([ox // tile, oy // tile], axis=1)  # (B, 2) block coords
+    # (B, 4): T-aligned block origin (drives the index_map) + exact window
+    # origin (drives the in-kernel window-parity mask)
+    origins = jnp.stack([ox // tile, oy // tile, ox, oy], axis=1)
 
     def im(di, dj):
         def index_map(i, origins_ref, q_ref, r_ref):

@@ -158,6 +158,11 @@ def main() -> None:
         help="active-search path: vmap reference or batched Pallas kernels "
              "(interpret-mode on CPU; Mosaic with REPRO_PALLAS_INTERPRET=0)",
     )
+    ap.add_argument(
+        "--knn-chunk", type=int, default=None,
+        help="stream datastore searches through fixed-size query chunks "
+             "(bounds kernel VMEM at serve scale; results are identical)",
+    )
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)
@@ -165,7 +170,10 @@ def main() -> None:
     params = M.init_params(jax.random.PRNGKey(0), cfg)
 
     rng = np.random.default_rng(0)
-    knn_cfg = knn_lm.KNNLMConfig(backend=args.knn_backend) if args.knn else None
+    knn_cfg = (
+        knn_lm.KNNLMConfig(backend=args.knn_backend, chunk_size=args.knn_chunk)
+        if args.knn else None
+    )
     datastore = None
     if args.knn:
         corpus = rng.integers(

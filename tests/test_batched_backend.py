@@ -112,7 +112,7 @@ def test_parity_sat_counter(rng):
 
 
 def test_batched_counts_match_scalar(rng):
-    """The kernel-backed batched count stack == per-query pyramid counts."""
+    """The level-scheduled batched counts == per-query pyramid counts."""
     from repro.core import projection as proj_lib
     from repro.core import pyramid as pyr
     import jax
@@ -124,6 +124,91 @@ def test_batched_counts_match_scalar(rng):
     got = batched.batched_counts(idx, cfg, qg, radii)
     want = jax.vmap(lambda g, r: pyr.count_in_circle(idx, cfg, g, r))(qg, radii)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("metric", ["l2", "l1"])
+def test_multilevel_matches_stacked(rng, metric):
+    """ONE tile_count_multilevel call == the PR-1 L-fold stack + select,
+    radii spanning every level (including r == max_radius, where level
+    selection clamps at the top of the pyramid)."""
+    from repro.core import projection as proj_lib
+
+    _, _, cfg, idx = _index(rng, n=1500, metric=metric)
+    assert cfg.levels >= 3  # the regime the level scheduler targets
+    q = jnp.asarray(rng.normal(size=(24, 2)), jnp.float32)
+    qg = proj_lib.to_grid_coords(idx.proj, q, cfg.grid_size)
+    radii = jnp.concatenate([
+        jnp.asarray(rng.integers(1, cfg.max_radius, size=20), jnp.int32),
+        jnp.full((4,), cfg.max_radius, jnp.int32),
+    ])
+    got = batched.batched_counts(idx, cfg, qg, radii)
+    want = batched.batched_counts_stacked(idx, cfg, qg, radii)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_parity_grid_corner_queries(rng):
+    """Backend parity where the count window clamps on both axes: queries
+    pinned to the grid corners (far outside the data mass, so Eq. 1 drives
+    radii up into clamped-window territory)."""
+    pts, _, cfg, idx = _index(rng, n=600)
+    lo, hi = float(jnp.min(pts)) - 1.0, float(jnp.max(pts)) + 1.0
+    q = jnp.asarray(
+        [[lo, lo], [hi, hi], [lo, hi], [hi, lo], [lo, 0.0], [0.0, hi]],
+        jnp.float32,
+    )
+    ref_res = act.search(idx, cfg, q, 8, backend="jnp")
+    got = act.search(idx, cfg, q, 8, backend="pallas")
+    _assert_results_equal(ref_res, got)
+
+
+def test_parity_max_radius_counts(rng):
+    """r == max_radius: the level clamps to the top of the pyramid and the
+    circle overruns the (whole-level) window — counts must still match the
+    per-query oracle bit-for-bit."""
+    from repro.core import projection as proj_lib
+    from repro.core import pyramid as pyr
+    import jax
+
+    _, _, cfg, idx = _index(rng, n=900)
+    q = jnp.asarray(rng.normal(size=(6, 2)), jnp.float32)
+    qg = proj_lib.to_grid_coords(idx.proj, q, cfg.grid_size)
+    radii = jnp.full((6,), cfg.max_radius, jnp.int32)
+    got = batched.batched_counts(idx, cfg, qg, radii)
+    want = jax.vmap(lambda g, r: pyr.count_in_circle(idx, cfg, g, r))(qg, radii)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # every point of the index is inside the max-radius circle
+    assert int(np.asarray(got).sum()) > 0
+
+
+def test_chunked_parity(rng):
+    """chunk_size streams fixed-shape invocations; results are bit-identical
+    for any chunking, on both backends (incl. a non-dividing chunk size)."""
+    _, _, cfg, idx = _index(rng, n=800)
+    q = jnp.asarray(rng.normal(size=(10, 2)), jnp.float32)
+    for backend in ("jnp", "pallas"):
+        full = act.search(idx, cfg, q, 5, backend=backend)
+        chunked = act.search(idx, cfg, q, 5, backend=backend, chunk_size=4)
+        _assert_results_equal(full, chunked)
+    ref_cls = act.classify(idx, cfg, q, 5, backend="pallas")
+    got_cls = act.classify(idx, cfg, q, 5, backend="pallas", chunk_size=3)
+    np.testing.assert_array_equal(np.asarray(ref_cls), np.asarray(got_cls))
+    for bad in (0, -1):
+        with pytest.raises(ValueError, match="chunk_size"):
+            act.search(idx, cfg, q, 5, backend="pallas", chunk_size=bad)
+
+
+def test_interpret_threading(rng):
+    """interpret= reaches the kernels from the public API (pallas backend)
+    and is rejected on the jnp backend where it has no meaning."""
+    _, _, cfg, idx = _index(rng, n=400)
+    q = jnp.asarray(rng.normal(size=(4, 2)), jnp.float32)
+    expl = act.search(idx, cfg, q, 3, backend="pallas", interpret=True)
+    dflt = act.search(idx, cfg, q, 3, backend="pallas")  # env default (CPU: on)
+    _assert_results_equal(expl, dflt)
+    with pytest.raises(ValueError, match="interpret"):
+        act.search(idx, cfg, q, 3, backend="jnp", interpret=True)
+    with pytest.raises(ValueError, match="interpret"):
+        act.classify(idx, cfg, q, 3, backend="jnp", interpret=False)
 
 
 def test_gather_matches_per_query(rng):

@@ -86,3 +86,37 @@ def test_grid_config_levels():
     assert cfg.padded_size >= 3000
     assert cfg.padded_size == cfg.tile * (1 << (cfg.levels - 1))
     assert cfg.padded_size // (1 << (cfg.levels - 1)) == cfg.tile
+
+
+@pytest.mark.parametrize("tile", [0, 1, 2, 3])
+def test_grid_config_rejects_degenerate_tile(tile):
+    """tile <= 3 breaks level_for_radius's containment guarantee (its
+    max(tile - 3, 1) divisor would silently under-select levels)."""
+    with pytest.raises(ValueError, match="tile"):
+        G.GridConfig(grid_size=64, tile=tile)
+
+
+def test_grid_config_accepts_min_tile():
+    assert G.GridConfig(grid_size=64, tile=4).tile == 4
+
+
+def test_flattened_tiles_layout(rng):
+    """pyr_tiles is the level-major T-tiling of the pyramid: tile (bx, by)
+    of level l lives at offset_l + bx * nblk_l + by."""
+    pts = jnp.asarray(rng.normal(size=(300, 2)), jnp.float32)
+    cfg, idx = _build(pts)
+    assert idx.pyr_tiles.shape == (
+        sum(nb * nb for nb in cfg.level_nblks), cfg.tile, cfg.tile, 1
+    )
+    off = 0
+    for lv, arr in enumerate(idx.pyramid):
+        nb = arr.shape[0] // cfg.tile
+        assert nb == cfg.level_nblks[lv]
+        for bx, by in ((0, 0), (nb - 1, 0), (nb - 1, nb - 1)):
+            want = arr[bx * cfg.tile:(bx + 1) * cfg.tile,
+                       by * cfg.tile:(by + 1) * cfg.tile]
+            got = idx.pyr_tiles[off + bx * nb + by]
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        off += nb * nb
+    # total mass is preserved level by level
+    assert int(idx.pyr_tiles.sum()) == 300 * cfg.levels

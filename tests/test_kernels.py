@@ -43,9 +43,10 @@ def test_tile_count_edges(rng):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-def test_tile_count_beyond_window_covers_more():
-    """Past the contract radius the kernel's 2Tx2T coverage counts >= ref
-    (ref truncates at its T-window) — never less."""
+def test_tile_count_beyond_window_matches_ref():
+    """Past the contract radius the kernel masks to the clamped T-window, so
+    it stays bit-identical to ref (which truncates at its T-window) instead
+    of overcounting from its 2Tx2T block cover."""
     rng = np.random.default_rng(1)
     s, tile = 32, 8
     level = jnp.asarray(rng.integers(0, 3, size=(s, s, 1)), jnp.int32)
@@ -53,7 +54,24 @@ def test_tile_count_beyond_window_covers_more():
     r = jnp.asarray(rng.uniform(4.0, 7.5, size=(6,)), jnp.float32)
     got = np.asarray(ops.tile_count(level, q, r, 1, tile, interpret=True))
     want = np.asarray(ref.tile_count(level, q, r, 1, tile))
-    assert (got >= want).all()
+    np.testing.assert_array_equal(got, want)
+
+
+def test_tile_count_window_parity_grid_edge():
+    """The headline regime for the window-parity fix: queries at grid
+    corners/borders with radii far past the contract, where the clamped
+    window and the circle disagree the most."""
+    rng = np.random.default_rng(2)
+    s, tile = 32, 8
+    level = jnp.asarray(rng.integers(0, 4, size=(s, s, 2)), jnp.int32)
+    q = jnp.asarray(
+        [[0.0, 0.0], [31.9, 31.9], [0.0, 31.9], [31.9, 0.0], [0.5, 16.0]],
+        jnp.float32,
+    )
+    r = jnp.asarray([10.0, 20.0, 31.0, 8.0, 15.0], jnp.float32)
+    got = np.asarray(ops.tile_count(level, q, r, 1, tile, interpret=True))
+    want = np.asarray(ref.tile_count(level, q, r, 1, tile))
+    np.testing.assert_array_equal(got, want)
 
 
 @settings(max_examples=20, deadline=None)
@@ -72,6 +90,88 @@ def test_tile_count_property(seed):
     got = ops.tile_count(level, q, r, scale, tile, interpret=True)
     want = ref.tile_count(level, q, r, scale, tile)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------- tile_count_multilevel ----
+
+
+def _pyramid_fixture(rng, grid=64, tile=8, c=2):
+    from repro.core.grid import GridConfig, build_index
+    from repro.core.projection import identity_projection
+
+    pts = jnp.asarray(rng.normal(size=(800, 2)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, c, size=800), jnp.int32)
+    cfg = GridConfig(grid_size=grid, tile=tile, n_classes=c)
+    idx = build_index(pts, cfg, identity_projection(pts), labels=labels)
+    return cfg, idx
+
+
+@pytest.mark.parametrize("metric", ["l2", "l1"])
+def test_tile_count_multilevel_matches_ref(rng, metric):
+    """One level-scheduled pallas_call == the stacked per-level select, for
+    radii spanning every pyramid level."""
+    from repro.core import pyramid as pyr
+
+    cfg, idx = _pyramid_fixture(rng)
+    b = 16
+    q = jnp.asarray(rng.uniform(0, cfg.padded_size, size=(b, 2)), jnp.float32)
+    r = jnp.asarray(rng.uniform(0.5, cfg.max_radius, size=(b,)), jnp.float32)
+    lv = pyr.level_for_radius(r, cfg)
+    got = ops.tile_count_multilevel(
+        idx.pyr_tiles, q, r, lv, cfg.tile, cfg.level_nblks, metric=metric,
+        interpret=True,
+    )
+    want = ref.tile_count_multilevel(idx.pyramid, q, r, lv, cfg.tile, metric=metric)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tile_count_multilevel_forced_levels(rng):
+    """Level is an INPUT, not derived: forcing every query to each level in
+    turn must reproduce that level's single-level kernel — including levels
+    whose window the circle overruns (window parity)."""
+    cfg, idx = _pyramid_fixture(rng)
+    b = 8
+    q = jnp.asarray(rng.uniform(0, cfg.padded_size, size=(b, 2)), jnp.float32)
+    r = jnp.asarray(rng.uniform(0.5, cfg.max_radius / 2, size=(b,)), jnp.float32)
+    for lv in range(cfg.levels):
+        levels = jnp.full((b,), lv, jnp.int32)
+        got = ops.tile_count_multilevel(
+            idx.pyr_tiles, q, r, levels, cfg.tile, cfg.level_nblks,
+            interpret=True,
+        )
+        want = ref.tile_count(idx.pyramid[lv], q, r, 1 << lv, cfg.tile)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want), err_msg=f"level {lv}"
+        )
+
+
+def test_tile_count_multilevel_max_radius_top_level(rng):
+    """r == max_radius clamps level selection at levels-1; the top tile IS
+    the whole level there, so the count must equal the total mass inside the
+    circle of the full grid."""
+    from repro.core import pyramid as pyr
+
+    cfg, idx = _pyramid_fixture(rng)
+    b = 5
+    q = jnp.asarray(rng.uniform(0, cfg.padded_size, size=(b, 2)), jnp.float32)
+    r = jnp.full((b,), float(cfg.max_radius), jnp.float32)
+    lv = pyr.level_for_radius(r, cfg)
+    assert int(lv[0]) == cfg.levels - 1
+    got = ops.tile_count_multilevel(
+        idx.pyr_tiles, q, r, lv, cfg.tile, cfg.level_nblks, interpret=True
+    )
+    want = ref.tile_count_multilevel(idx.pyramid, q, r, lv, cfg.tile)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tile_count_multilevel_bad_layout_raises(rng):
+    cfg, idx = _pyramid_fixture(rng)
+    with pytest.raises(ValueError, match="tiles shape"):
+        ops.tile_count_multilevel(
+            idx.pyr_tiles[:-1], jnp.zeros((1, 2), jnp.float32),
+            jnp.ones((1,), jnp.float32), jnp.zeros((1,), jnp.int32),
+            cfg.tile, cfg.level_nblks, interpret=True,
+        )
 
 
 # -------------------------------------------------------- candidate_topk ----
