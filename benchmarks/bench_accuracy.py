@@ -7,9 +7,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Csv, paper_data
-from repro.core import active_search as act, exact
-from repro.core.grid import build_index
-from repro.core.projection import identity_projection
+from repro.api import ActiveSearcher, identity_projection
 from repro.configs.paper_active_search import K, N_CLASSES, N_QUERIES, PAPER_GRID
 
 
@@ -19,11 +17,14 @@ def main(ns=(1_000, 10_000, 100_000), seeds=(0, 1, 2)) -> None:
         for seed in seeds:
             rng = np.random.default_rng(seed)
             pts, labels = paper_data(rng, n, N_CLASSES)
-            idx = build_index(pts, PAPER_GRID, identity_projection(pts), labels=labels)
+            searcher = ActiveSearcher.build(
+                pts, labels=labels, cfg=PAPER_GRID,
+                proj=identity_projection(pts),
+            )
             q, _ = paper_data(rng, N_QUERIES)
-            truth = exact.classify(q, pts, labels, K, N_CLASSES)
+            truth = searcher.with_plan(backend="exact").classify(q, K)
             for mode in ("paper", "refined"):
-                pred = act.classify(idx, PAPER_GRID, q, K, mode=mode)
+                pred = searcher.classify(q, K, mode=mode)
                 acc = float(np.mean(np.asarray(pred) == np.asarray(truth)))
                 csv.row(n, seed, mode, f"{acc:.3f}")
     return csv

@@ -1,0 +1,97 @@
+"""End-to-end facade throughput: queries/sec for EVERY registered backend
+through the one `ActiveSearcher` handle, plus the facade-overhead delta
+(handle call vs invoking the registered BackendImpl directly).
+
+The overhead delta is the price of the facade itself — plan validation,
+device placement, the chunking wrapper — measured against the exact same
+underlying impl, so it should sit in the noise floor.  Results land in
+BENCH_e2e.json (next to BENCH_kernels.json; see REPRO_BENCH_ARTIFACTS) so
+CI records per-backend throughput on every push.
+
+Env knobs:
+  REPRO_BENCH_QUICK=1      shrink to CI-friendly sizes
+  REPRO_BENCH_ARTIFACTS=D  directory for BENCH_e2e.json (default ".")
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, timeit
+from repro import api
+
+
+def _quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    n, b, k = (5_000, 32, 11) if _quick() else (100_000, 256, 11)
+    cfg = api.GridConfig(grid_size=256, tile=16, n_classes=3, window=32,
+                         row_cap=32, r0=10, k_slack=2.0)
+    pts = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 3, size=n), jnp.int32)
+    searcher = api.ActiveSearcher.build(
+        pts, labels=labels, cfg=cfg, proj=api.identity_projection(pts)
+    )
+    q = jnp.asarray(rng.normal(size=(b, 2)), jnp.float32)
+
+    csv = Csv("backend,queries_per_s,facade_us_per_q,facade_overhead_us_per_q,"
+              "parity_vs_jnp")
+    results: dict = {"schema": 1, "timestamp": time.time(), "quick": _quick(),
+                     "n": n, "batch": b, "k": k, "backends": {}}
+    # the jnp reference FIRST (registered_backends() is sorted, so relying on
+    # iteration order would leave earlier backends without a reference); the
+    # exact comparator ranks the whole datastore, so only grid-backed
+    # backends are expected to agree bit-for-bit — others record parity None
+    ref_ids = np.asarray(searcher.search(q, k).ids)
+    grid_backed = ("jnp", "pallas")
+    repeats = 3 if _quick() else 5
+    for name in api.registered_backends():
+        impl = api.get_backend(name)
+        if impl.search is None:
+            csv.row(name, "-", "-", "-", "count-only")
+            continue
+        if name == "sharded":
+            # needs a mesh-built handle (ActiveSearcher.build_sharded);
+            # the single-host CI bench skips it rather than faking a mesh
+            csv.row(name, "-", "-", "-", "skipped (needs mesh)")
+            continue
+        planned = searcher.with_plan(backend=name)
+        t_facade = timeit(lambda: planned.search(q, k).ids,
+                          repeats=repeats, warmup=1)
+        t_direct = timeit(lambda: impl.search(planned, q, k, "refined").ids,
+                          repeats=repeats, warmup=1)
+        res = planned.search(q, k)
+        parity = (
+            bool(np.array_equal(np.asarray(res.ids), ref_ids))
+            if name in grid_backed else None
+        )
+        overhead = t_facade - t_direct
+        results["backends"][name] = {
+            "queries_per_s": b / t_facade,
+            "facade_s": t_facade,
+            "direct_s": t_direct,
+            "facade_overhead_s": overhead,
+            "parity_vs_jnp": parity,
+        }
+        csv.row(name, f"{b / t_facade:.1f}", f"{t_facade * 1e6 / b:.1f}",
+                f"{overhead * 1e6 / b:+.1f}",
+                "n/a" if parity is None else parity)
+
+    art_dir = os.environ.get("REPRO_BENCH_ARTIFACTS", ".")
+    path = os.path.join(art_dir, "BENCH_e2e.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"[bench_e2e] wrote {path}", flush=True)
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -94,10 +94,11 @@ def bench_count_paths(rng, csv: Csv) -> dict:
     hardware does not pay — on TPU the index_map DMAs only the addressed
     (T, T, C) blocks.  A VMEM-scale pyramid keeps that artifact small, so
     the ratio below reflects what the scheduler actually removes: L
-    pallas_calls-worth of programs per Eq.-1 iteration vs one."""
-    from repro.core import batched, projection as proj_lib
-    from repro.core.grid import GridConfig, build_index
-    from repro.core.projection import identity_projection
+    pallas_calls-worth of programs per Eq.-1 iteration vs one.
+
+    Both count paths run through the facade: the stacked baseline is the
+    registered count-only backend "pallas_stacked"."""
+    from repro.api import ActiveSearcher, ExecutionPlan, GridConfig, identity_projection
 
     # same config in quick mode: smaller sweeps time too few programs to
     # measure reliably, and this one still finishes in seconds
@@ -106,24 +107,21 @@ def bench_count_paths(rng, csv: Csv) -> dict:
                      row_cap=32, r0=10, k_slack=2.0)
     n = 5_000
     pts = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
-    idx = build_index(pts, cfg, identity_projection(pts))
+    multi = ActiveSearcher.build(
+        pts, cfg=cfg, proj=identity_projection(pts),
+        plan=ExecutionPlan(backend="pallas", interpret=True),
+    )
+    stacked = multi.with_plan(backend="pallas_stacked")
     q = jnp.asarray(rng.normal(size=(b, 2)), jnp.float32)
-    qg = proj_lib.to_grid_coords(idx.proj, q, cfg.grid_size)
     radii = jnp.asarray(rng.integers(1, cfg.max_radius, size=b), jnp.int32)
 
     # one pass is only ~5-15 ms, so generous repeats keep the median stable
     # against scheduler noise at negligible cost
-    t_stack = timeit(
-        lambda: batched.batched_counts_stacked(idx, cfg, qg, radii, True),
-        repeats=25, warmup=3,
-    )
-    t_multi = timeit(
-        lambda: batched.batched_counts(idx, cfg, qg, radii, True),
-        repeats=25, warmup=3,
-    )
+    t_stack = timeit(lambda: stacked.count_at(q, radii), repeats=25, warmup=3)
+    t_multi = timeit(lambda: multi.count_at(q, radii), repeats=25, warmup=3)
     parity = bool(np.array_equal(
-        np.asarray(batched.batched_counts(idx, cfg, qg, radii, True)),
-        np.asarray(batched.batched_counts_stacked(idx, cfg, qg, radii, True)),
+        np.asarray(multi.count_at(q, radii)),
+        np.asarray(stacked.count_at(q, radii)),
     ))
     out = {
         "levels": cfg.levels,
@@ -150,9 +148,7 @@ def bench_search_backends(rng, csv: Csv) -> list[dict]:
     interpret-mode, so its ABSOLUTE time is not hardware-meaningful — the row
     pairs exist so the same sweep on a TPU (REPRO_PALLAS_INTERPRET=0) reads
     out the real speedup; the end-of-row flag re-checks result parity."""
-    from repro.core import active_search as act
-    from repro.core.grid import GridConfig, build_index
-    from repro.core.projection import identity_projection
+    from repro.api import ActiveSearcher, GridConfig, identity_projection
 
     k = 11
     rows = []
@@ -161,17 +157,15 @@ def bench_search_backends(rng, csv: Csv) -> list[dict]:
     for n, b in ((20_000, 64), (100_000, 256)):
         pts = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
         labels = jnp.asarray(rng.integers(0, 3, size=n), jnp.int32)
-        idx = build_index(pts, cfg, identity_projection(pts), labels=labels)
+        vmap_s = ActiveSearcher.build(
+            pts, labels=labels, cfg=cfg, proj=identity_projection(pts)
+        )
+        pallas_s = vmap_s.with_plan(backend="pallas")
         q = jnp.asarray(rng.normal(size=(b, 2)), jnp.float32)
-        t_vmap = timeit(
-            lambda: act.search(idx, cfg, q, k, backend="jnp").ids, repeats=3
-        )
-        t_pal = timeit(
-            lambda: act.search(idx, cfg, q, k, backend="pallas").ids,
-            repeats=3, warmup=1,
-        )
-        a = act.search(idx, cfg, q, k, backend="jnp")
-        p = act.search(idx, cfg, q, k, backend="pallas")
+        t_vmap = timeit(lambda: vmap_s.search(q, k).ids, repeats=3)
+        t_pal = timeit(lambda: pallas_s.search(q, k).ids, repeats=3, warmup=1)
+        a = vmap_s.search(q, k)
+        p = pallas_s.search(q, k)
         ok = bool(np.array_equal(np.asarray(a.ids), np.asarray(p.ids)))
         csv.row("search_vmap_jnp", f"N={n} B={b} k={k}", f"{t_vmap*1e6/b:.1f}", ok)
         csv.row("search_batched_pallas", f"N={n} B={b} k={k}", f"{t_pal*1e6/b:.1f}", ok)

@@ -8,9 +8,8 @@ import dataclasses
 import numpy as np
 
 from benchmarks.common import Csv, paper_data, timeit
-from repro.core import active_search as act, exact
-from repro.core.grid import GridConfig, build_index
-from repro.core.projection import identity_projection
+from repro.api import ActiveSearcher, GridConfig, identity_projection
+from repro.core import exact
 
 K, N = 11, 20_000
 
@@ -31,10 +30,12 @@ def main() -> None:
     for name, kw in variants:
         cfg = GridConfig(grid_size=512, tile=16, n_classes=3, window=64,
                          row_cap=64, r0=16, k_slack=2.0, **kw)
-        idx = build_index(pts, cfg, identity_projection(pts), labels=labels)
-        pred = act.classify(idx, cfg, q, K)
+        searcher = ActiveSearcher.build(
+            pts, labels=labels, cfg=cfg, proj=identity_projection(pts)
+        )
+        pred = searcher.classify(q, K)
         acc = float(np.mean(np.asarray(pred) == np.asarray(truth)))
-        t = timeit(lambda: act.classify(idx, cfg, q, K), repeats=3)
+        t = timeit(lambda: searcher.classify(q, K), repeats=3)
         csv.row(name, f"{acc:.3f}", f"{t:.4f}")
     return csv
 

@@ -9,9 +9,8 @@ import dataclasses
 import numpy as np
 
 from benchmarks.common import Csv, paper_data, timeit
-from repro.core import active_search as act, exact
-from repro.core.grid import GridConfig, build_index
-from repro.core.projection import identity_projection
+from repro.api import ActiveSearcher, GridConfig, identity_projection
+from repro.core import exact
 
 K, N = 11, 20_000
 
@@ -26,10 +25,13 @@ def main(grids=(128, 256, 512, 1024, 2048)) -> None:
     for g in grids:
         cfg = GridConfig(grid_size=g, tile=16, n_classes=3, window=64,
                          row_cap=64, r0=max(g // 30, 2), k_slack=2.0)
-        idx = build_index(pts, cfg, identity_projection(pts), labels=labels)
-        pred = act.classify(idx, cfg, q, K)
+        searcher = ActiveSearcher.build(
+            pts, labels=labels, cfg=cfg, proj=identity_projection(pts)
+        )
+        pred = searcher.classify(q, K)
         acc = float(np.mean(np.asarray(pred) == np.asarray(truth)))
-        t = timeit(lambda: act.classify(idx, cfg, q, K), repeats=3)
+        t = timeit(lambda: searcher.classify(q, K), repeats=3)
+        idx = searcher.index
         mib = sum(a.size * a.dtype.itemsize for a in
                   [idx.offsets, *idx.pyramid]) / 2**20
         csv.row(g, f"{acc:.3f}", f"{t:.4f}", f"{mib:.1f}")

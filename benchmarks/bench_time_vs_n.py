@@ -4,6 +4,10 @@ is ~independent of N (the paper's headline claim).
 100 query points, k=11, 3 classes.  Grid fixed while N varies, exactly as the
 paper fixes its 3000x3000 image.  (grid_size is CPU-scaled; the 3000-image
 setting runs in bench_accuracy.py.)
+
+Both sides run through ONE ActiveSearcher handle: the exact comparator is
+the registered "exact" backend, and the active-search plan (backend /
+chunk_size) is constructed once from the CLI and re-used for every N.
 """
 
 from __future__ import annotations
@@ -11,9 +15,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Csv, paper_data, timeit
-from repro.core import active_search as act, exact
-from repro.core.grid import GridConfig, build_index
-from repro.core.projection import identity_projection
+from repro.api import ActiveSearcher, ExecutionPlan, GridConfig, identity_projection
 
 K = 11
 N_QUERIES = 100
@@ -22,12 +24,13 @@ N_QUERIES = 100
 def main(
     grid_size: int = 1024,
     ns=(1_000, 4_000, 16_000, 64_000, 256_000),
-    backend: str = "jnp",
-    chunk_size: int | None = None,
+    plan: ExecutionPlan | None = None,
 ) -> None:
-    """backend="pallas" times the batched kernel pipeline instead of the vmap
-    path (interpret-mode on CPU — compare on TPU for hardware numbers);
+    """plan selects the execution path once — e.g.
+    ExecutionPlan(backend="pallas") times the batched kernel pipeline
+    (interpret-mode on CPU — compare on TPU for hardware numbers) and
     chunk_size streams queries through fixed-size kernel invocations."""
+    plan = plan or ExecutionPlan()
     rng = np.random.default_rng(0)
     csv = Csv("n,backend,exact_knn_s,active_search_s,active_build_s,speedup")
     cfg = GridConfig(grid_size=grid_size, tile=16, n_classes=3, window=64,
@@ -37,18 +40,16 @@ def main(
     for n in ns:
         pts, labels = paper_data(rng, n)
         proj = identity_projection(pts)
-        t_build = timeit(
-            lambda: build_index(pts, cfg, proj, labels=labels), repeats=3, warmup=1
+        build = lambda: ActiveSearcher.build(
+            pts, labels=labels, cfg=cfg, plan=plan, proj=proj
         )
-        idx = build_index(pts, cfg, proj, labels=labels)
-        t_exact = timeit(lambda: exact.classify(q, pts, labels, K, 3), repeats=3)
-        t_act = timeit(
-            lambda: act.classify(idx, cfg, q, K, backend=backend,
-                                 chunk_size=chunk_size),
-            repeats=3,
-        )
-        csv.row(n, backend, f"{t_exact:.4f}", f"{t_act:.4f}", f"{t_build:.4f}",
-                f"{t_exact / t_act:.2f}")
+        t_build = timeit(build, repeats=3, warmup=1)
+        searcher = build()
+        brute = searcher.with_plan(backend="exact")
+        t_exact = timeit(lambda: brute.classify(q, K), repeats=3)
+        t_act = timeit(lambda: searcher.classify(q, K), repeats=3)
+        csv.row(n, plan.backend, f"{t_exact:.4f}", f"{t_act:.4f}",
+                f"{t_build:.4f}", f"{t_exact / t_act:.2f}")
 
     # derived: paper claims active-search time ~independent of N
     return csv
@@ -58,9 +59,10 @@ if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--backend", choices=["jnp", "pallas"], default="jnp")
+    ap.add_argument("--backend", default="jnp",
+                    help="registered backend name (repro.api)")
     ap.add_argument("--grid-size", type=int, default=1024)
     ap.add_argument("--chunk-size", type=int, default=None)
     args = ap.parse_args()
-    main(grid_size=args.grid_size, backend=args.backend,
-         chunk_size=args.chunk_size)
+    main(grid_size=args.grid_size,
+         plan=ExecutionPlan(backend=args.backend, chunk_size=args.chunk_size))

@@ -24,6 +24,8 @@ BENCHES = [
      "benchmarks.bench_convergence"),
     ("kernels", "kernel microbench + interpret validation",
      "benchmarks.bench_kernels"),
+    ("e2e", "facade throughput per registered backend (BENCH_e2e.json)",
+     "benchmarks.bench_e2e"),
     ("lm_serve", "kNN-LM serving throughput",
      "benchmarks.bench_lm_serve"),
     ("roofline", "roofline table from the dry-run artifact",

@@ -5,14 +5,16 @@
 Reproduces the paper's workflow (Figs. 1-2): rasterize 2-D points onto an
 image, actively search a query's neighbors by adapting the radius (Eq. 1),
 and classify by per-class counts — then sanity-check against exact kNN.
+
+ONE handle serves every execution path: `ActiveSearcher` bundles the index
+with an `ExecutionPlan` (backend, interpret, chunk_size), and `.with_plan()`
+re-plans the same index onto another registered backend.
 """
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+import jax.numpy as jnp
 
-from repro.core import GridConfig, build_index, identity_projection, search, classify
-from repro.core import exact
+from repro.api import ActiveSearcher, ExecutionPlan, GridConfig, identity_projection
 
 rng = np.random.default_rng(0)
 
@@ -30,42 +32,48 @@ cfg = GridConfig(
     row_cap=64,
     k_slack=2.0,      # accept n in [k, 2k] then re-rank (production mode)
 )
-index = build_index(points, cfg, identity_projection(points), labels=labels)
+searcher = ActiveSearcher.build(
+    points, labels=labels, cfg=cfg, proj=identity_projection(points)
+)
+print("index stats      :", {k_: v for k_, v in searcher.stats().items()
+                             if k_ in ("n_points", "levels", "backend")})
 
 # --- search: zoom around the query, not over the dataset --------------------
 queries = jnp.asarray(rng.normal(size=(5, 2)), jnp.float32)
-res = search(index, cfg, queries, K)          # batched active search (jnp path)
+res = searcher.search(queries, K)             # batched active search (jnp plan)
 print("neighbor ids[0]  :", np.asarray(res.ids[0]))
 print("distances[0]     :", np.round(np.asarray(res.dists[0]), 4))
 print("Eq.1 radius/iters:", np.asarray(res.radius), np.asarray(res.iters))
 
-# --- same search on the kernel-backed batched pipeline ----------------------
+# --- same index, kernel-backed plan -----------------------------------------
 # backend="pallas" runs the Eq.-1 loop on the level-scheduled
 # kernels.tile_count_multilevel (one pallas_call per iteration counts every
 # query from its own pyramid level), gathers the CSR window in one batched
 # take, and re-ranks with the fused candidate_topk kernel (interpret-mode on
 # CPU; compiles to Mosaic on TPU with REPRO_PALLAS_INTERPRET=0).  Results
-# are identical to the jnp path; chunk_size= streams big batches through
+# are identical to the jnp plan; chunk_size= streams big batches through
 # fixed-shape kernel invocations without changing any result.
-res_k = search(index, cfg, queries, K, backend="pallas")
+res_k = searcher.with_plan(backend="pallas").search(queries, K)
 assert np.array_equal(np.asarray(res.ids), np.asarray(res_k.ids))
 assert np.array_equal(np.asarray(res.dists), np.asarray(res_k.dists))
-print("pallas backend   : identical ids/dists ✓")
+print("pallas plan      : identical ids/dists ✓")
 
 # --- classify like the paper's Fig. 2 (argmax of per-class circle counts) ---
-pred_paper = classify(index, cfg, queries, K, mode="paper")
-pred_refined = classify(index, cfg, queries, K, mode="refined")
-truth = exact.classify(queries, points, labels, K, n_classes=3)
+pred_paper = searcher.classify(queries, K, mode="paper")
+pred_refined = searcher.classify(queries, K, mode="refined")
+truth = searcher.with_plan(backend="exact").classify(queries, K)
 print("paper-mode predictions :", np.asarray(pred_paper))
 print("refined predictions    :", np.asarray(pred_refined))
 print("exact kNN ground truth :", np.asarray(truth))
 
 # --- the paper's property: query cost independent of N ----------------------
 import time
+plan = ExecutionPlan(backend="jnp")
 for n in (10_000, 100_000, 1_000_000):
     pts = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
-    idx = build_index(pts, cfg, identity_projection(pts))
-    search(idx, cfg, queries, K).ids.block_until_ready()   # warm
+    s_n = ActiveSearcher.build(pts, cfg=cfg, plan=plan,
+                               proj=identity_projection(pts))
+    s_n.search(queries, K).ids.block_until_ready()   # warm
     t0 = time.perf_counter()
-    search(idx, cfg, queries, K).ids.block_until_ready()
+    s_n.search(queries, K).ids.block_until_ready()
     print(f"N={n:>9,}: active search {1e3*(time.perf_counter()-t0):6.1f} ms")

@@ -1,4 +1,10 @@
-"""Core: the paper's active-search kNN as a composable JAX library."""
+"""Core: the paper's active-search kNN as a composable JAX library.
+
+Public entry point: `repro.api` (`core/engine.py`) — one `ActiveSearcher`
+handle over every execution backend, planned by a frozen `ExecutionPlan`.
+The module-level `search`/`classify` here are deprecation shims kept for
+older call sites.
+"""
 
 from repro.core.grid import GridConfig, GridIndex, build_index
 from repro.core.projection import (
@@ -8,6 +14,14 @@ from repro.core.projection import (
     pca_projection,
 )
 from repro.core.active_search import SearchResult, classify, search, search_one
+from repro.core.engine import (
+    ActiveSearcher,
+    BackendImpl,
+    ExecutionPlan,
+    get_backend,
+    register_backend,
+    registered_backends,
+)
 from repro.core import exact
 
 __all__ = [
@@ -23,4 +37,10 @@ __all__ = [
     "search_one",
     "classify",
     "exact",
+    "ActiveSearcher",
+    "BackendImpl",
+    "ExecutionPlan",
+    "get_backend",
+    "register_backend",
+    "registered_backends",
 ]

@@ -14,6 +14,7 @@ All functions are jit/vmap friendly; fixed shapes throughout.
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple
 
@@ -53,28 +54,57 @@ def _metric_dist(a: jax.Array, b: jax.Array, metric: str) -> jax.Array:
     return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
 
 
-def run_chunked(fn, queries: jax.Array, chunk_size: int | None):
+def majority_vote(labels: jax.Array, valid: jax.Array, n_classes: int) -> jax.Array:
+    """(B, k) neighbor labels + validity -> (B,) argmax class votes.
+
+    The one vote used by every classify path (jnp, pallas, sharded)."""
+
+    def one(lab, ok):
+        onehot = jax.nn.one_hot(lab, n_classes, dtype=jnp.float32)
+        return jnp.argmax(jnp.sum(onehot * ok[:, None], axis=0)).astype(jnp.int32)
+
+    return jax.vmap(one)(labels, valid)
+
+
+def run_chunked(fn, queries, chunk_size: int | None):
     """Stream a batched query pipeline through fixed-size chunks.
 
-    Calls `fn` on (chunk_size, d) slices (the last chunk is padded to full
-    size by repeating its final row, so every kernel invocation keeps ONE
-    static shape / VMEM footprint) and concatenates the per-chunk pytrees.
-    Every query is computed exactly as in the unchunked call — all per-lane
-    state in the pipeline is independent across the batch — so results are
-    bit-identical for any chunk_size.
+    `queries` is an array — or any pytree of arrays sharing a leading batch
+    axis (e.g. (q_grid, radii) pairs).  Calls `fn` on chunk_size-row slices
+    (the last chunk is padded to full size by repeating its final row, so
+    every kernel invocation keeps ONE static shape / VMEM footprint) and
+    concatenates the per-chunk output pytrees.  Every query is computed
+    exactly as in the unchunked call — all per-lane state in the pipeline is
+    independent across the batch — so results are bit-identical for any
+    chunk_size.
     """
     if chunk_size is not None and chunk_size <= 0:
         raise ValueError(f"chunk_size must be positive, got {chunk_size}")
-    b = queries.shape[0]
+    b = jax.tree.leaves(queries)[0].shape[0]
+    if b == 0:
+        # An empty batch would otherwise reach the pipeline (or the
+        # pad-by-last-row broadcast) with a zero-size leading axis; derive
+        # the output pytree abstractly from a 1-row probe and return empty,
+        # correctly-shaped leaves instead of invoking any kernel.
+        probe = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct((1,) + a.shape[1:], a.dtype), queries
+        )
+        out = jax.eval_shape(fn, probe)
+        return jax.tree.map(
+            lambda s: jnp.zeros((0,) + s.shape[1:], s.dtype), out
+        )
     if not chunk_size or b <= chunk_size:
         return fn(queries)
     outs = []
     for i in range(0, b, chunk_size):
-        chunk = queries[i : i + chunk_size]
-        pad = chunk_size - chunk.shape[0]
+        chunk = jax.tree.map(lambda a: a[i : i + chunk_size], queries)
+        pad = chunk_size - jax.tree.leaves(chunk)[0].shape[0]
         if pad:
-            chunk = jnp.concatenate(
-                [chunk, jnp.broadcast_to(chunk[-1:], (pad,) + chunk.shape[1:])]
+            chunk = jax.tree.map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.broadcast_to(a[-1:], (pad,) + a.shape[1:])]
+                ),
+                chunk,
             )
         outs.append(fn(chunk))
     return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0)[:b], *outs)
@@ -211,6 +241,23 @@ def _search_jnp(
     return jax.vmap(lambda q: search_one(index, cfg, q, k, mode))(queries)
 
 
+def _deprecated_searcher(index, cfg, backend, interpret, chunk_size, what):
+    """Shared shim plumbing: warn once per call site, build the facade."""
+    from repro.core import engine
+
+    warnings.warn(
+        f"active_search.{what}(backend=/interpret=/chunk_size=) is "
+        f"deprecated; build a repro.api.ActiveSearcher with an "
+        f"ExecutionPlan instead (results are bit-identical)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    plan = engine.ExecutionPlan(
+        backend=backend, interpret=interpret, chunk_size=chunk_size
+    )
+    return engine.ActiveSearcher.from_index(index, cfg, plan=plan)
+
+
 def search(
     index: GridIndex,
     cfg: GridConfig,
@@ -221,35 +268,16 @@ def search(
     interpret: bool | None = None,
     chunk_size: int | None = None,
 ) -> SearchResult:
-    """Batched active search: queries (B, d) -> SearchResult with leading B.
+    """DEPRECATED shim — use `repro.api.ActiveSearcher.search`.
 
-    backend="jnp":    per-query pipeline under vmap (pure lax/jnp; reference).
-    backend="pallas": batched kernel-backed pipeline (core/batched.py) —
-                      level-scheduled tile_count_multilevel radius loop,
-                      one-shot CSR gather, fused candidate_topk re-rank.
-                      Interpret-mode on CPU (REPRO_PALLAS_INTERPRET=1,
-                      default), Mosaic on TPU.
-    interpret:        force/disable Pallas interpret mode (pallas backend
-                      only; None = REPRO_PALLAS_INTERPRET).
-    chunk_size:       stream the batch through fixed-size query chunks so
-                      serve-scale batches keep one static kernel shape /
-                      VMEM footprint.  Bit-identical for any value.
-    Results are identical across backends (tests/test_batched_backend.py).
+    Delegates to the facade (`core/engine.py`), which resolves `backend`
+    from the registry and carries interpret/chunk_size in an ExecutionPlan;
+    results are bit-identical to the pre-facade path.  Kept so existing
+    call sites and tests keep passing.
     """
-    if backend == "pallas":
-        from repro.core import batched
-
-        return batched.search(
-            index, cfg, queries, k, mode=mode, interpret=interpret,
-            chunk_size=chunk_size,
-        )
-    if backend != "jnp":
-        raise ValueError(f"unknown backend {backend!r}; expected 'jnp' or 'pallas'")
-    if interpret is not None:
-        raise ValueError("interpret= only applies to backend='pallas'")
-    return run_chunked(
-        lambda q: _search_jnp(index, cfg, q, k, mode), queries, chunk_size
-    )
+    return _deprecated_searcher(
+        index, cfg, backend, interpret, chunk_size, "search"
+    ).search(queries, k, mode=mode)
 
 
 @partial(jax.jit, static_argnames=("cfg", "k", "mode"))
@@ -269,13 +297,8 @@ def _classify_jnp(
 
         return jax.vmap(one)(queries)
 
-    res = search(index, cfg, queries, k, mode="refined")
-
-    def vote(labels, valid):
-        onehot = jax.nn.one_hot(labels, cfg.n_classes, dtype=jnp.float32)
-        return jnp.argmax(jnp.sum(onehot * valid[:, None], axis=0)).astype(jnp.int32)
-
-    refined = jax.vmap(vote)(res.labels, res.valid)
+    res = _search_jnp(index, cfg, queries, k, mode="refined")
+    refined = majority_vote(res.labels, res.valid, cfg.n_classes)
 
     # graceful degradation: when the data is so sparse that the Eq.-1 circle
     # outruns the candidate window (res.truncated / <k valid candidates), the
@@ -300,25 +323,13 @@ def classify(
     interpret: bool | None = None,
     chunk_size: int | None = None,
 ) -> jax.Array:
-    """kNN classification.
+    """DEPRECATED shim — use `repro.api.ActiveSearcher.classify`.
 
     mode="paper":   argmax of per-class counts inside the final circle — pure
                     count comparison on the class channels, exactly Fig. 2.
     mode="refined": majority vote over the refined top-k labels.
-    backend: "jnp" (vmap reference) or "pallas" (kernel-backed, core/batched.py).
-    interpret/chunk_size: as in `search`.
+    Delegates to the facade (`core/engine.py`); bit-identical results.
     """
-    if backend == "pallas":
-        from repro.core import batched
-
-        return batched.classify(
-            index, cfg, queries, k, mode=mode, interpret=interpret,
-            chunk_size=chunk_size,
-        )
-    if backend != "jnp":
-        raise ValueError(f"unknown backend {backend!r}; expected 'jnp' or 'pallas'")
-    if interpret is not None:
-        raise ValueError("interpret= only applies to backend='pallas'")
-    return run_chunked(
-        lambda q: _classify_jnp(index, cfg, q, k, mode), queries, chunk_size
-    )
+    return _deprecated_searcher(
+        index, cfg, backend, interpret, chunk_size, "classify"
+    ).classify(queries, k, mode=mode)

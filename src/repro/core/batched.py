@@ -43,6 +43,7 @@ from repro.core.active_search import (
     Candidates,
     SearchResult,
     _metric_dist,
+    majority_vote,
     padded_csr,
     run_chunked,
     window_spans,
@@ -338,12 +339,7 @@ def _classify_impl(
         return jnp.argmax(counts, axis=-1).astype(jnp.int32)
 
     res = _search_impl(index, cfg, queries, k, mode="refined", interpret=interpret)
-
-    def vote(labels, valid):
-        onehot = jax.nn.one_hot(labels, cfg.n_classes, dtype=jnp.float32)
-        return jnp.argmax(jnp.sum(onehot * valid[:, None], axis=0)).astype(jnp.int32)
-
-    refined = jax.vmap(vote)(res.labels, res.valid)
+    refined = majority_vote(res.labels, res.valid, cfg.n_classes)
 
     # same graceful degradation as the jnp path, but counted by the kernel
     fallback = jnp.argmax(

@@ -20,7 +20,6 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import active_search as act
 from repro.core.active_search import SearchResult
 from repro.core.grid import GridConfig, GridIndex, build_index
 from repro.core.projection import Projection
@@ -79,12 +78,21 @@ def sharded_search(
 ) -> SearchResult:
     """Active search over the sharded index; queries (B, d) replicated.
 
-    Returns the globally merged top-k per query (ids are global point ids).
+    Registered as backend "sharded" in the engine registry (core/engine.py):
+    every shard runs its OWN per-shard ActiveSearcher handle (jnp plan) under
+    shard_map, then the per-shard top-k lists are merged.  Returns the
+    globally merged top-k per query (ids are global point ids).
     """
+    # function-level import: engine registers this module's search as a
+    # backend, so a top-level import would be circular
+    from repro.core import engine as eng
+
+    local_plan = eng.ExecutionPlan(backend="jnp")
 
     def local_query(idx_stacked, q):
         idx = jax.tree.map(lambda a: a[0], idx_stacked)
-        res = act.search(idx, cfg, q, k, mode=mode)          # (B, k) per-shard
+        shard = eng.ActiveSearcher(index=idx, cfg=cfg, plan=local_plan)
+        res = shard.search(q, k, mode=mode)                  # (B, k) per-shard
         d_all = lax.all_gather(res.dists, axis)               # (S, B, k)
         i_all = lax.all_gather(res.ids, axis)
         l_all = lax.all_gather(res.labels, axis)

@@ -1,0 +1,504 @@
+"""One searcher handle over every execution path (exported as `repro.api`).
+
+The paper's pipeline (project -> Eq.-1 radius adaptation -> windowed CSR
+gather -> re-rank) used to be reachable through four parallel entry points —
+`active_search.search/classify`, `core.batched`, `core.exact`,
+`core.distributed` — each re-threading the same execution knobs (`backend=`,
+`interpret=`, `chunk_size=`) through every signature.  This module collapses
+them into a FAISS-style handle:
+
+  plan = ExecutionPlan(backend="pallas", chunk_size=256)
+  s = ActiveSearcher.build(points, labels=labels,
+                           cfg=GridConfig(n_classes=3), plan=plan)
+  res   = s.search(queries, k=11)            # batched SearchResult
+  preds = s.classify(queries, k=11)
+  cnts  = s.count_at(queries, radii)         # (B, C) circle counts
+  s2    = s.with_plan(backend="exact")       # same index, new execution plan
+
+HOW a search executes lives entirely in the frozen `ExecutionPlan`
+(backend name, Pallas interpret override, chunked streaming, donate-able
+device placement); WHAT is searched lives in the (index, cfg) pair the
+handle carries.  Backends are uniform `BackendImpl` adapters resolved from a
+registry (`register_backend`) — `jnp`, `pallas`, `exact`, `sharded`, and the
+count-only `pallas_stacked` benchmark baseline ship registered; new
+execution paths (TPU-Mosaic-tuned plans, async/caching) plug in without
+widening any signature.
+
+Every backend returns the same batched `SearchResult`; the exact brute-force
+comparator's `ExactResult` is folded into it with the paper-stat fields
+(radius/iters/converged/truncated) defaulted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exact as exact_lib
+from repro.core import projection as proj_lib
+from repro.core import pyramid as pyr
+from repro.core.active_search import SearchResult, _search_jnp, run_chunked
+from repro.core.grid import GridConfig, GridIndex, build_index
+
+_MODES = ("refined", "paper")
+
+
+# ------------------------------------------------------------------ plan -----
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """HOW a search executes — frozen, hashable, safe as a jit static arg.
+
+    backend:    registered backend name ("jnp" | "pallas" | "exact" |
+                "sharded" | anything added via `register_backend`).
+    interpret:  force/disable Pallas interpret mode (Pallas-backed backends
+                only; None = REPRO_PALLAS_INTERPRET).
+    chunk_size: stream query batches through fixed-size chunks so every
+                kernel invocation keeps ONE static shape / VMEM footprint.
+                Bit-identical for any value.
+    device:     optional placement target (jax.Device or Sharding); queries
+                are `jax.device_put` there before dispatch.
+    donate:     donate the caller's query buffer on placement (serve-scale
+                batches avoid a copy; requires `device`).
+    """
+
+    backend: str = "jnp"
+    interpret: bool | None = None
+    chunk_size: int | None = None
+    device: Any = None
+    donate: bool = False
+
+    def __post_init__(self):
+        if self.chunk_size is not None and self.chunk_size <= 0:
+            raise ValueError(
+                f"chunk_size must be positive, got {self.chunk_size}"
+            )
+        if self.donate and self.device is None:
+            raise ValueError("donate=True needs an ExecutionPlan.device")
+
+
+# -------------------------------------------------------------- registry -----
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendImpl:
+    """Uniform adapter a backend registers.  Each callable takes the
+    searcher handle first, so the impl sees (index, cfg, plan) without the
+    registry prescribing how they are consumed.
+
+      search(searcher, queries, k, mode)   -> SearchResult   (batched)
+      classify(searcher, queries, k, mode) -> (B,) int32
+      count_at(searcher, q_grid, radii)    -> (B, C) int32 circle counts
+
+    Any of the three may be None (e.g. `pallas_stacked` is a count-only
+    benchmark baseline); the facade raises eagerly when an op is missing.
+    `supports_interpret` gates `plan.interpret`.
+    """
+
+    search: Callable[..., SearchResult] | None = None
+    classify: Callable[..., jax.Array] | None = None
+    count_at: Callable[..., jax.Array] | None = None
+    supports_interpret: bool = False
+    description: str = ""
+
+
+_REGISTRY: dict[str, BackendImpl] = {}
+
+
+def register_backend(name: str, impl: BackendImpl) -> None:
+    """Register (or replace) an execution backend under `name`."""
+    if not isinstance(impl, BackendImpl):
+        raise TypeError(f"impl must be a BackendImpl, got {type(impl).__name__}")
+    _REGISTRY[name] = impl
+
+
+def get_backend(name: str) -> BackendImpl:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def registered_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ------------------------------------------------------------------ handle ---
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ActiveSearcher:
+    """The one handle: (index, cfg) = WHAT is searched, plan = HOW.
+
+    Frozen and cheap to re-plan: `with_plan` returns a new handle sharing
+    the same index arrays.  `mesh`/`axis` are only set by `build_sharded`
+    (the "sharded" backend merges per-shard searchers under shard_map).
+
+    eq=False: the handle wraps jax arrays, so it compares/hashes by
+    IDENTITY — pass the hashable `cfg`/`plan` as jit static args, never the
+    handle itself.
+    """
+
+    index: GridIndex
+    cfg: GridConfig
+    plan: ExecutionPlan = ExecutionPlan()
+    mesh: Any = None
+    axis: str | None = None
+
+    # -------------------------------------------------------- construction --
+    @classmethod
+    def build(
+        cls,
+        points: jax.Array,
+        *,
+        labels: jax.Array | None = None,
+        ids: jax.Array | None = None,
+        cfg: GridConfig | None = None,
+        plan: ExecutionPlan | None = None,
+        proj: proj_lib.Projection | None = None,
+    ) -> "ActiveSearcher":
+        """Build the paper's grid image + CSR buckets and wrap them in a
+        handle.  proj defaults to a PCA projection to the grid plane."""
+        cfg = cfg or GridConfig()
+        if proj is None:
+            proj = proj_lib.pca_projection(points, grid_dim=2)
+        index = build_index(points, cfg, proj, labels=labels, ids=ids)
+        return cls(index=index, cfg=cfg, plan=plan or ExecutionPlan())
+
+    @classmethod
+    def from_index(
+        cls,
+        index: GridIndex,
+        cfg: GridConfig,
+        plan: ExecutionPlan | None = None,
+    ) -> "ActiveSearcher":
+        """Wrap an already-built GridIndex (e.g. a kNN-LM datastore)."""
+        return cls(index=index, cfg=cfg, plan=plan or ExecutionPlan())
+
+    @classmethod
+    def build_sharded(
+        cls,
+        points: jax.Array,
+        *,
+        mesh: Any,
+        axis: str,
+        labels: jax.Array | None = None,
+        cfg: GridConfig | None = None,
+        plan: ExecutionPlan | None = None,
+        proj: proj_lib.Projection | None = None,
+    ) -> "ActiveSearcher":
+        """One grid per mesh shard with GLOBAL point ids; searches merge the
+        per-shard top-k lists (backend "sharded", core/distributed.py)."""
+        from repro.core import distributed as dist
+
+        cfg = cfg or GridConfig()
+        if proj is None:
+            proj = proj_lib.pca_projection(points, grid_dim=2)
+        index = dist.build_sharded_index(points, cfg, proj, mesh, axis, labels)
+        plan = dataclasses.replace(plan or ExecutionPlan(), backend="sharded")
+        return cls(index=index, cfg=cfg, plan=plan, mesh=mesh, axis=axis)
+
+    def with_plan(
+        self, plan: ExecutionPlan | None = None, **overrides
+    ) -> "ActiveSearcher":
+        """Same index, new execution plan (full plan or field overrides).
+
+        Switching `backend=` drops the backend-specific `interpret` knob
+        when the new backend does not support it (unless explicitly
+        overridden too), so `pallas_plan_handle.with_plan(backend="exact")`
+        works instead of tripping the interpret validation."""
+        if plan is not None and overrides:
+            raise ValueError("pass a full ExecutionPlan OR field overrides")
+        if plan is None and "backend" in overrides and "interpret" not in overrides:
+            impl = _REGISTRY.get(overrides["backend"])
+            if impl is not None and not impl.supports_interpret:
+                overrides = {**overrides, "interpret": None}
+        new = plan if plan is not None else dataclasses.replace(self.plan, **overrides)
+        return dataclasses.replace(self, plan=new)
+
+    # ------------------------------------------------------------- dispatch --
+    def _impl(self, op: str) -> Callable:
+        """Resolve the plan's backend and validate the plan EAGERLY (before
+        any tracing), so every backend raises the same errors for the same
+        misuses."""
+        impl = get_backend(self.plan.backend)
+        if self.plan.interpret is not None and not impl.supports_interpret:
+            raise ValueError(
+                f"interpret= only applies to Pallas-backed backends; "
+                f"backend {self.plan.backend!r} does not support it"
+            )
+        fn = getattr(impl, op)
+        if fn is None:
+            raise ValueError(
+                f"backend {self.plan.backend!r} does not implement {op}()"
+            )
+        return fn
+
+    def _place(self, arr: jax.Array) -> jax.Array:
+        if self.plan.device is None:
+            return arr
+        return jax.device_put(arr, self.plan.device, donate=self.plan.donate)
+
+    @staticmethod
+    def _check_mode(mode: str) -> None:
+        if mode not in _MODES:
+            raise ValueError(f"unknown mode {mode!r}; expected one of {_MODES}")
+
+    # ------------------------------------------------------------------ ops --
+    def search(self, queries: jax.Array, k: int, mode: str = "refined") -> SearchResult:
+        """Batched active search: queries (B, d) -> SearchResult, leading B.
+
+        mode="paper":   members of the final Eq.-1 circle, ranked by
+                        grid-pixel distance.
+        mode="refined": candidates re-ranked by the true metric in the
+                        original space (recommended).
+        """
+        self._check_mode(mode)
+        fn = self._impl("search")
+        q = self._place(jnp.asarray(queries))
+        return run_chunked(lambda c: fn(self, c, k, mode), q, self.plan.chunk_size)
+
+    def classify(self, queries: jax.Array, k: int, mode: str = "refined") -> jax.Array:
+        """kNN classification: (B, d) -> (B,) int32 class predictions."""
+        self._check_mode(mode)
+        if self.cfg.n_classes <= 0:
+            raise ValueError("classify() needs an index built with n_classes > 0")
+        fn = self._impl("classify")
+        q = self._place(jnp.asarray(queries))
+        return run_chunked(lambda c: fn(self, c, k, mode), q, self.plan.chunk_size)
+
+    def count_at(self, queries: jax.Array, radii: jax.Array) -> jax.Array:
+        """Per-class circle counts (B, C) at the given radii (pixels) — the
+        paper's count primitive, exposed for diagnostics and benchmarks.
+        queries are ORIGINAL-space (B, d); projection happens here.
+        plan.chunk_size streams (q_grid, radius) pairs like search does."""
+        fn = self._impl("count_at")
+        q = self._place(jnp.asarray(queries))
+        q_grid = proj_lib.to_grid_coords(self.index.proj, q, self.cfg.grid_size)
+        return run_chunked(
+            lambda qr: fn(self, qr[0], qr[1]),
+            (q_grid, jnp.asarray(radii, jnp.int32)),
+            self.plan.chunk_size,
+        )
+
+    def stats(self) -> dict[str, Any]:
+        """Static facts about the handle: index shape/memory + plan."""
+        idx, cfg = self.index, self.cfg
+        tile_bytes = (
+            0 if idx.pyr_tiles is None
+            else idx.pyr_tiles.size * idx.pyr_tiles.dtype.itemsize
+        )
+        pyramid_bytes = sum(a.size * a.dtype.itemsize for a in idx.pyramid)
+        csr_bytes = sum(
+            a.size * a.dtype.itemsize
+            for a in (idx.points_sorted, idx.coords_sorted,
+                      idx.labels_sorted, idx.ids_sorted, idx.offsets)
+        )
+        return {
+            # sharded handles carry a leading shard axis on every leaf —
+            # fold it in so n_points is the GLOBAL datastore size, matching
+            # the byte totals below
+            "n_points": int(math.prod(idx.points_sorted.shape[:-1])),
+            "dim": int(idx.points_sorted.shape[-1]),
+            "grid_size": cfg.grid_size,
+            "padded_size": cfg.padded_size,
+            "levels": cfg.levels,
+            "n_classes": cfg.n_classes,
+            "metric": cfg.metric,
+            "counter": cfg.counter,
+            "backend": self.plan.backend,
+            "plan": self.plan,
+            "sharded": self.mesh is not None,
+            "pyramid_bytes": int(pyramid_bytes),
+            "pyr_tiles_bytes": int(tile_bytes),
+            "csr_bytes": int(csr_bytes),
+        }
+
+
+# ------------------------------------------------------ built-in backends ----
+
+
+def _jnp_search(s: ActiveSearcher, queries, k, mode):
+    return _search_jnp(s.index, s.cfg, queries, k, mode)
+
+
+def _jnp_classify(s: ActiveSearcher, queries, k, mode):
+    from repro.core.active_search import _classify_jnp
+
+    return _classify_jnp(s.index, s.cfg, queries, k, mode)
+
+
+def _jnp_count_at(s: ActiveSearcher, q_grid, radii):
+    return _count_jnp(s.index, s.cfg, q_grid, radii)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _count_jnp(index: GridIndex, cfg: GridConfig, q_grid, radii):
+    return jax.vmap(lambda g, r: pyr.count_in_circle(index, cfg, g, r))(
+        q_grid, radii
+    )
+
+
+def _pallas_search(s: ActiveSearcher, queries, k, mode):
+    from repro.core import batched
+
+    return batched.search(
+        s.index, s.cfg, queries, k, mode=mode, interpret=s.plan.interpret
+    )
+
+
+def _pallas_classify(s: ActiveSearcher, queries, k, mode):
+    from repro.core import batched
+
+    return batched.classify(
+        s.index, s.cfg, queries, k, mode=mode, interpret=s.plan.interpret
+    )
+
+
+def _pallas_count_at(s: ActiveSearcher, q_grid, radii):
+    from repro.core import batched
+
+    return batched.batched_counts(s.index, s.cfg, q_grid, radii, s.plan.interpret)
+
+
+def _pallas_stacked_count_at(s: ActiveSearcher, q_grid, radii):
+    from repro.core import batched
+
+    return batched.batched_counts_stacked(
+        s.index, s.cfg, q_grid, radii, s.plan.interpret
+    )
+
+
+def _exact_ordered(s: ActiveSearcher):
+    """CSR arrays restored to original-id order, so the exact comparator sees
+    the datastore exactly as the caller supplied it (bit-identical tie
+    breaks vs pre-facade `exact.knn(points, ...)` calls).
+
+    Memoized on the handle (frozen dataclasses still allow __dict__
+    caching): the O(N log N) argsort + O(N d) gathers run once per handle,
+    not once per call/chunk.  NEVER cached under a trace — inside
+    jit/eval_shape the reorder produces tracers, and storing those on the
+    handle would leak them into later calls (UnexpectedTracerError)."""
+    cached = s.__dict__.get("_exact_ordered_cache")
+    if cached is not None:
+        return cached
+    index = s.index
+    order = jnp.argsort(index.ids_sorted)
+    out = (
+        index.points_sorted[order],
+        index.labels_sorted[order],
+        index.ids_sorted[order],
+    )
+    if not any(isinstance(a, jax.core.Tracer) for a in out):
+        object.__setattr__(s, "_exact_ordered_cache", out)
+    return out
+
+
+def _exact_search(s: ActiveSearcher, queries, k, mode):
+    """Brute-force comparator folded into the uniform SearchResult: the
+    paper-stat fields (radius/count/iters/converged/truncated) are defaulted
+    since exact kNN has no Eq.-1 loop.  `mode` is accepted for interface
+    uniformity; exact distances are always original-space."""
+    pts, labels, ids = _exact_ordered(s)
+    res = exact_lib.knn(
+        jnp.asarray(queries, jnp.float32), pts, k, metric=s.cfg.metric
+    )
+    b = res.ids.shape[0]
+    valid = jnp.isfinite(res.dists) & (res.ids >= 0)
+    pos = jnp.clip(res.ids, 0, pts.shape[0] - 1)
+    return SearchResult(
+        ids=jnp.where(valid, ids[pos], -1),
+        dists=jnp.where(valid, res.dists, jnp.inf).astype(jnp.float32),
+        labels=jnp.where(valid, labels[pos], -1),
+        valid=valid,
+        radius=jnp.zeros((b,), jnp.int32),
+        count=jnp.sum(valid, axis=1).astype(jnp.int32),
+        iters=jnp.zeros((b,), jnp.int32),
+        converged=jnp.ones((b,), bool),
+        truncated=jnp.zeros((b,), bool),
+    )
+
+
+def _exact_classify(s: ActiveSearcher, queries, k, mode):
+    pts, labels, _ = _exact_ordered(s)
+    return exact_lib.classify(
+        jnp.asarray(queries, jnp.float32), pts, labels, k,
+        s.cfg.n_classes, metric=s.cfg.metric,
+    )
+
+
+def _sharded_search(s: ActiveSearcher, queries, k, mode):
+    if s.mesh is None or s.axis is None:
+        raise ValueError(
+            "backend 'sharded' needs a handle from ActiveSearcher."
+            "build_sharded (mesh + axis)"
+        )
+    from repro.core import distributed as dist
+
+    return dist.sharded_search(
+        s.index, s.cfg, queries, k, s.mesh, s.axis, mode=mode
+    )
+
+
+def _sharded_classify(s: ActiveSearcher, queries, k, mode):
+    """Majority vote over the globally merged top-k.
+
+    Unlike the single-index jnp/pallas paths there is NO count-based
+    fallback for short/truncated lanes: Eq. 1 converges to a DIFFERENT
+    radius on every shard, so "per-class counts at the final radius" has no
+    global definition.  mode="paper" (pure count argmax) is rejected for
+    the same reason."""
+    if mode != "refined":
+        raise ValueError("backend 'sharded' classifies in mode='refined' only")
+    from repro.core.active_search import majority_vote
+
+    res = _sharded_search(s, queries, k, "refined")
+    return majority_vote(res.labels, res.valid, s.cfg.n_classes)
+
+
+register_backend("jnp", BackendImpl(
+    search=_jnp_search, classify=_jnp_classify, count_at=_jnp_count_at,
+    description="per-query reference pipeline under jax.vmap (pure lax/jnp)",
+))
+register_backend("pallas", BackendImpl(
+    search=_pallas_search, classify=_pallas_classify,
+    count_at=_pallas_count_at, supports_interpret=True,
+    description="batched kernel pipeline: level-scheduled "
+                "tile_count_multilevel + one-shot CSR gather + fused "
+                "candidate_topk (core/batched.py)",
+))
+register_backend("pallas_stacked", BackendImpl(
+    count_at=_pallas_stacked_count_at, supports_interpret=True,
+    description="count-only benchmark baseline: the PR-1 per-level "
+                "tile_count stack + select",
+))
+register_backend("exact", BackendImpl(
+    search=_exact_search, classify=_exact_classify,
+    description="blocked brute-force kNN — the paper's 'original kNN' "
+                "comparator (core/exact.py)",
+))
+register_backend("sharded", BackendImpl(
+    search=_sharded_search, classify=_sharded_classify,
+    description="per-shard searchers under shard_map + all_gather top-k "
+                "merge (core/distributed.py; build via build_sharded)",
+))
+
+
+__all__ = [
+    "ActiveSearcher",
+    "BackendImpl",
+    "ExecutionPlan",
+    "SearchResult",
+    "get_backend",
+    "register_backend",
+    "registered_backends",
+]

@@ -55,6 +55,16 @@ class GridConfig:
                 "positive containment margin (tile/2 - 1.5), so tile must "
                 "be >= 4"
             )
+        # _metric_dist and the count kernels treat ANY non-"l1" string as l2;
+        # reject typos eagerly instead of silently computing l2 distances.
+        if self.metric not in ("l2", "l1"):
+            raise ValueError(
+                f"unknown metric {self.metric!r}; expected 'l2' or 'l1'"
+            )
+        if self.counter not in ("pyramid", "sat"):
+            raise ValueError(
+                f"unknown counter {self.counter!r}; expected 'pyramid' or 'sat'"
+            )
 
     @property
     def n_channels(self) -> int:

@@ -20,7 +20,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import active_search as act
+from repro.core.engine import ActiveSearcher, ExecutionPlan
 from repro.core.grid import GridConfig, GridIndex, build_index
 from repro.core.projection import Projection, pca_projection
 
@@ -30,9 +30,9 @@ class KNNLMConfig:
     k: int = 16
     lam: float = 0.25        # interpolation weight on the kNN distribution
     temperature: float = 1.0  # distance softmax temperature
-    backend: str = "jnp"     # "jnp" | "pallas" — active-search execution path
-    chunk_size: int | None = None  # stream queries through fixed-size search
-    # chunks (bounded kernel VMEM at serve scale); None = whole batch at once
+    # HOW datastore searches execute (backend, interpret, chunked streaming)
+    # — one ExecutionPlan instead of loose backend=/chunk_size= fields
+    plan: ExecutionPlan = ExecutionPlan()
     grid: GridConfig = dataclasses.field(
         default_factory=lambda: GridConfig(
             grid_size=1024, tile=16, window=32, row_cap=32, r0=8, k_slack=4.0
@@ -54,8 +54,8 @@ def knn_logprobs(
     index: GridIndex, cfg: KNNLMConfig, hidden: jax.Array, vocab_size: int
 ) -> jax.Array:
     """log p_knn over the vocab.  hidden: (B, d) -> (B, vocab)."""
-    res = act.search(index, cfg.grid, hidden, cfg.k, mode="refined",
-                     backend=cfg.backend, chunk_size=cfg.chunk_size)
+    searcher = ActiveSearcher.from_index(index, cfg.grid, plan=cfg.plan)
+    res = searcher.search(hidden, cfg.k, mode="refined")
     w = jnp.where(res.valid, -res.dists / cfg.temperature, -jnp.inf)
     w = jax.nn.softmax(w, axis=-1)                    # (B, k)
     w = jnp.where(res.valid, w, 0.0)
@@ -65,6 +65,12 @@ def knn_logprobs(
         return jnp.zeros((vocab_size,), jnp.float32).at[ti].add(wi)
 
     p = jax.vmap(scatter)(w, tok)                     # (B, vocab)
+    # A query can retrieve NOTHING (sparse datastore, empty candidate
+    # window): softmax over all -inf is nan and the scatter leaves p == 0.
+    # No evidence -> the uninformative distribution, so p_knn stays a
+    # normalized distribution for every lane and interpolation stays finite.
+    any_valid = jnp.any(res.valid, axis=-1, keepdims=True)
+    p = jnp.where(any_valid, p, 1.0 / vocab_size)
     return jnp.log(jnp.maximum(p, 1e-20))
 
 

@@ -20,7 +20,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import active_search as act
+from repro.core.engine import ActiveSearcher, ExecutionPlan
 from repro.core.grid import GridConfig, GridIndex, build_index
 from repro.core.projection import Projection, gaussian_projection
 
@@ -29,6 +29,7 @@ from repro.core.projection import Projection, gaussian_projection
 class RetrievalMemoryConfig:
     n_retrieved: int = 64     # m: positions fetched per decode step
     local_window: int = 512   # recent tokens attended exactly
+    plan: ExecutionPlan = ExecutionPlan()  # HOW retrieval searches execute
     grid: GridConfig = dataclasses.field(
         default_factory=lambda: GridConfig(
             grid_size=2048, tile=16, window=32, row_cap=64, r0=8, k_slack=4.0,
@@ -69,5 +70,6 @@ def retrieve_positions(
     index: GridIndex, cfg: RetrievalMemoryConfig, q_sum: jax.Array
 ) -> tuple[jax.Array, jax.Array]:
     """q_sum: (B, hd) -> positions (B, m) int32 and validity (B, m) bool."""
-    res = act.search(index, cfg.grid, q_sum, cfg.n_retrieved, mode="refined")
+    searcher = ActiveSearcher.from_index(index, cfg.grid, plan=cfg.plan)
+    res = searcher.search(q_sum, cfg.n_retrieved, mode="refined")
     return jnp.maximum(res.ids, 0), res.valid

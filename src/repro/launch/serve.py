@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs import ARCH_NAMES, get_smoke
 from repro.core import knn_lm
 from repro.core.grid import GridIndex
@@ -154,9 +155,10 @@ def main() -> None:
     ap.add_argument("--knn", action="store_true", help="enable the kNN-LM head")
     ap.add_argument("--datastore-size", type=int, default=8192)
     ap.add_argument(
-        "--knn-backend", choices=["jnp", "pallas"], default="jnp",
-        help="active-search path: vmap reference or batched Pallas kernels "
-             "(interpret-mode on CPU; Mosaic with REPRO_PALLAS_INTERPRET=0)",
+        "--knn-backend", default="jnp",
+        help="registered active-search backend for the datastore "
+             "(repro.api.registered_backends(); 'pallas' = batched kernels, "
+             "interpret-mode on CPU, Mosaic with REPRO_PALLAS_INTERPRET=0)",
     )
     ap.add_argument(
         "--knn-chunk", type=int, default=None,
@@ -164,16 +166,30 @@ def main() -> None:
              "(bounds kernel VMEM at serve scale; results are identical)",
     )
     args = ap.parse_args()
+    if args.knn:
+        # fail on a bad backend name NOW, not after model init + datastore
+        # build; count-only backends can't serve searches either
+        try:
+            impl = api.get_backend(args.knn_backend)
+        except ValueError as e:
+            raise SystemExit(f"--knn-backend: {e}") from None
+        if impl.search is None:
+            searchable = [n for n in api.registered_backends()
+                          if api.get_backend(n).search is not None]
+            raise SystemExit(
+                f"--knn-backend {args.knn_backend!r} does not implement "
+                f"search(); pick one of {searchable}"
+            )
 
     cfg = get_smoke(args.arch)
     mesh = make_host_mesh(1, 1)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
 
     rng = np.random.default_rng(0)
-    knn_cfg = (
-        knn_lm.KNNLMConfig(backend=args.knn_backend, chunk_size=args.knn_chunk)
-        if args.knn else None
-    )
+    # ONE ExecutionPlan carries every execution knob from the CLI down
+    # through KNNLMConfig -> ActiveSearcher; no per-signature re-plumbing
+    plan = api.ExecutionPlan(backend=args.knn_backend, chunk_size=args.knn_chunk)
+    knn_cfg = knn_lm.KNNLMConfig(plan=plan) if args.knn else None
     datastore = None
     if args.knn:
         corpus = rng.integers(

@@ -289,7 +289,7 @@ def make_retrieval_serve_step(cfg: ModelConfig, mesh: Mesh, mem_cfg=None):
     summaries (all jittable), then decode attending only to
     (local window) U (retrieved positions).  The search cost — the paper's
     contribution — is thereby part of cost_analysis for this cell."""
-    from repro.core import active_search as act
+    from repro.core import engine as eng
     from repro.core import retrieval_memory as rmem
 
     if mem_cfg is None:
@@ -300,7 +300,9 @@ def make_retrieval_serve_step(cfg: ModelConfig, mesh: Mesh, mem_cfg=None):
         wq0 = params["blocks"][0]["core"]["wq"][0]          # (d, H, hd)
         q0 = jnp.einsum("bsd,dhk->bshk", x, wq0.astype(x.dtype))
         q_sum = jnp.mean(q0[:, 0].astype(jnp.float32), axis=1)   # (B, hd)
-        res = act.search(index, mem_cfg.grid, q_sum, mem_cfg.n_retrieved)
+        res = eng.ActiveSearcher.from_index(
+            index, mem_cfg.grid, plan=mem_cfg.plan
+        ).search(q_sum, mem_cfg.n_retrieved)
         retrieved = jnp.maximum(res.ids, 0)
         ok = res.valid & (retrieved < pos)
         return M.decode_step(

@@ -52,6 +52,43 @@ def test_sharded_index_matches_single():
     """)
 
 
+def test_sharded_backend_via_facade():
+    """ActiveSearcher.build_sharded registers mesh+axis on the handle and the
+    "sharded" backend merges per-shard searchers; results match the direct
+    distributed.sharded_search call bit-for-bit."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro import api
+        from repro.core import distributed as D
+        from repro.core.grid import GridConfig
+        from repro.core.projection import identity_projection
+
+        mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("data",))
+        rng = np.random.default_rng(0)
+        pts = jnp.asarray(rng.normal(size=(4096, 2)), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 3, size=4096), jnp.int32)
+        cfg = GridConfig(grid_size=128, tile=16, n_classes=3, window=48,
+                         row_cap=48, r0=6, k_slack=2.0)
+        proj = identity_projection(pts)
+        s = api.ActiveSearcher.build_sharded(
+            pts, mesh=mesh, axis="data", labels=labels, cfg=cfg, proj=proj)
+        assert s.plan.backend == "sharded"
+        q = D.replicate_queries(
+            jnp.asarray(rng.normal(size=(16, 2)), jnp.float32), mesh)
+        res = s.search(q, 8)
+        want = D.sharded_search(s.index, cfg, q, 8, mesh, "data")
+        for f in res._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(res, f)), np.asarray(getattr(want, f)),
+                err_msg=f)
+        preds = s.classify(q, 8)
+        assert preds.shape == (16,)
+        assert int(np.asarray(preds).min()) >= 0
+        print("sharded facade ok")
+    """)
+
+
 def test_train_step_on_2x4_mesh():
     run_py("""
         import jax, jax.numpy as jnp, numpy as np

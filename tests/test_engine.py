@@ -1,0 +1,315 @@
+"""The ActiveSearcher facade (core/engine.py, exported as repro.api):
+backend registry, ExecutionPlan validation, parity with the pre-facade
+entry points, deprecation shims, and the B=0 run_chunked regression."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import active_search as act
+from repro.core import exact
+from repro.core.active_search import run_chunked
+from repro.core.grid import GridConfig, build_index
+from repro.core.projection import identity_projection
+
+
+def _searcher(rng, n=1000, n_classes=3, **kw):
+    pts = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, max(n_classes, 1), size=n), jnp.int32)
+    cfg = GridConfig(grid_size=128, tile=16, n_classes=n_classes, window=48,
+                     row_cap=48, r0=8, k_slack=2.0, **kw)
+    idx = build_index(pts, cfg, identity_projection(pts), labels=labels)
+    return pts, labels, api.ActiveSearcher.from_index(idx, cfg)
+
+
+def _assert_results_equal(a, b):
+    for field in api.SearchResult._fields:
+        ga, gb = np.asarray(getattr(a, field)), np.asarray(getattr(b, field))
+        assert ga.shape == gb.shape, (field, ga.shape, gb.shape)
+        assert ga.dtype == gb.dtype, (field, ga.dtype, gb.dtype)
+        np.testing.assert_array_equal(ga, gb, err_msg=field)
+
+
+# ------------------------------------------------------------------ parity ---
+
+
+@pytest.mark.parametrize("mode", ["refined", "paper"])
+def test_facade_parity_jnp_vs_pallas(rng, mode):
+    """The handle is bit-identical to the pre-facade paths: the jnp plan
+    reproduces _search_jnp, the pallas plan reproduces core.batched, and the
+    two plans agree with each other — search AND classify, both modes."""
+    _, _, s = _searcher(rng)
+    q = jnp.asarray(rng.normal(size=(8, 2)), jnp.float32)
+    ref = act._search_jnp(s.index, s.cfg, q, 8, mode)
+    got = s.search(q, 8, mode=mode)
+    _assert_results_equal(ref, got)
+    got_p = s.with_plan(backend="pallas").search(q, 8, mode=mode)
+    _assert_results_equal(ref, got_p)
+    np.testing.assert_array_equal(
+        np.asarray(s.classify(q, 8, mode=mode)),
+        np.asarray(s.with_plan(backend="pallas").classify(q, 8, mode=mode)),
+    )
+
+
+def test_facade_parity_exact(rng):
+    """The exact backend folds ExactResult into SearchResult: same ids and
+    distances as the raw comparator (original point order), paper-stat
+    fields defaulted, classify bit-identical to exact.classify."""
+    pts, labels, s = _searcher(rng)
+    q = jnp.asarray(rng.normal(size=(6, 2)), jnp.float32)
+    raw = exact.knn(q, pts, 8, metric=s.cfg.metric)
+    got = s.with_plan(backend="exact").search(q, 8)
+    np.testing.assert_array_equal(np.asarray(raw.ids), np.asarray(got.ids))
+    np.testing.assert_array_equal(np.asarray(raw.dists), np.asarray(got.dists))
+    assert got.labels.shape == got.ids.shape
+    np.testing.assert_array_equal(
+        np.asarray(got.labels),
+        np.asarray(labels)[np.asarray(raw.ids)],
+    )
+    # paper-stat fields are defaulted, batched, and well-typed
+    assert got.radius.shape == (6,) and int(np.asarray(got.radius).max()) == 0
+    assert bool(np.asarray(got.converged).all())
+    assert not bool(np.asarray(got.truncated).any())
+    np.testing.assert_array_equal(
+        np.asarray(exact.classify(q, pts, labels, 8, 3)),
+        np.asarray(s.with_plan(backend="exact").classify(q, 8)),
+    )
+
+
+def test_count_at_parity_across_backends(rng):
+    """count_at: jnp (vmap count_in_circle) == pallas (level-scheduled
+    kernel) == pallas_stacked (PR-1 baseline) for radii spanning levels."""
+    _, _, s = _searcher(rng)
+    q = jnp.asarray(rng.normal(size=(10, 2)), jnp.float32)
+    radii = jnp.asarray(rng.integers(1, s.cfg.max_radius, size=10), jnp.int32)
+    want = s.count_at(q, radii)
+    for backend in ("pallas", "pallas_stacked"):
+        got = s.with_plan(backend=backend).count_at(q, radii)
+        np.testing.assert_array_equal(
+            np.asarray(want), np.asarray(got), err_msg=backend
+        )
+
+
+# ---------------------------------------------------------------- registry ---
+
+
+def test_unknown_backend_lists_registered_names(rng):
+    _, _, s = _searcher(rng)
+    q = jnp.zeros((1, 2), jnp.float32)
+    with pytest.raises(ValueError, match=r"unknown backend 'tpu-magic'"):
+        s.with_plan(backend="tpu-magic").search(q, 3)
+    with pytest.raises(ValueError, match=r"'jnp'.*'pallas'"):
+        s.with_plan(backend="tpu-magic").search(q, 3)
+
+
+def test_register_backend_roundtrip(rng):
+    """A custom BackendImpl registered under a new name is dispatched by the
+    facade with the searcher handle and the call arguments intact."""
+    _, _, s = _searcher(rng)
+    q = jnp.zeros((2, 2), jnp.float32)
+    seen = {}
+
+    def fake_search(searcher, queries, k, mode):
+        seen["cfg"] = searcher.cfg
+        seen["k"], seen["mode"] = k, mode
+        return act._search_jnp(searcher.index, searcher.cfg, queries, k, mode)
+
+    api.register_backend("custom-test", api.BackendImpl(search=fake_search))
+    try:
+        assert "custom-test" in api.registered_backends()
+        got = s.with_plan(backend="custom-test").search(q, 3, mode="paper")
+        assert seen == {"cfg": s.cfg, "k": 3, "mode": "paper"}
+        _assert_results_equal(act._search_jnp(s.index, s.cfg, q, 3, "paper"), got)
+        # ops the impl does not provide raise eagerly, naming the backend
+        with pytest.raises(ValueError, match="custom-test.*classify"):
+            s.with_plan(backend="custom-test").classify(q, 3)
+    finally:
+        from repro.core import engine
+
+        engine._REGISTRY.pop("custom-test", None)
+    with pytest.raises(TypeError, match="BackendImpl"):
+        api.register_backend("bad", lambda *a: None)
+
+
+# ------------------------------------------------------------------- shims ---
+
+
+def test_deprecated_shims_warn_and_match_facade(rng):
+    _, _, s = _searcher(rng)
+    q = jnp.asarray(rng.normal(size=(4, 2)), jnp.float32)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        shim_res = act.search(s.index, s.cfg, q, 5, backend="pallas")
+        shim_cls = act.classify(s.index, s.cfg, q, 5)
+    assert sum(issubclass(x.category, DeprecationWarning) for x in w) == 2
+    _assert_results_equal(s.with_plan(backend="pallas").search(q, 5), shim_res)
+    np.testing.assert_array_equal(
+        np.asarray(s.classify(q, 5)), np.asarray(shim_cls)
+    )
+
+
+# -------------------------------------------------------- eager validation ---
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "exact"])
+def test_classify_without_classes_raises_uniformly(rng, backend):
+    _, _, s = _searcher(rng, n=300, n_classes=0)
+    q = jnp.zeros((2, 2), jnp.float32)
+    with pytest.raises(ValueError, match="n_classes > 0"):
+        s.with_plan(backend=backend).classify(q, 3)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "exact", "sharded"])
+def test_interpret_rejected_uniformly_off_pallas(rng, backend):
+    _, _, s = _searcher(rng, n=300)
+    q = jnp.zeros((2, 2), jnp.float32)
+    with pytest.raises(ValueError, match="interpret"):
+        s.with_plan(backend=backend, interpret=True).search(q, 3)
+    with pytest.raises(ValueError, match="interpret"):
+        s.with_plan(backend=backend, interpret=False).classify(q, 3)
+
+
+def test_plan_validation(rng):
+    with pytest.raises(ValueError, match="chunk_size"):
+        api.ExecutionPlan(chunk_size=0)
+    with pytest.raises(ValueError, match="donate"):
+        api.ExecutionPlan(donate=True)
+    _, _, s = _searcher(rng, n=200)
+    with pytest.raises(ValueError, match="mode"):
+        s.search(jnp.zeros((1, 2), jnp.float32), 3, mode="telepathic")
+    with pytest.raises(ValueError, match="full ExecutionPlan OR"):
+        s.with_plan(api.ExecutionPlan(), backend="pallas")
+
+
+def test_gridconfig_rejects_unknown_metric():
+    with pytest.raises(ValueError, match="metric"):
+        GridConfig(metric="cosine")
+    with pytest.raises(ValueError, match="counter"):
+        GridConfig(counter="hyperloglog")
+    GridConfig(metric="l1")  # both paper metrics still construct
+    GridConfig(metric="l2")
+
+
+# -------------------------------------------------------------- B=0 batches --
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_empty_batch_with_chunking(rng, backend):
+    """Regression: B=0 with chunk_size set must return empty, correctly
+    shaped pytrees instead of tripping the pad-by-last-row broadcast or
+    invoking a kernel on a zero-size grid."""
+    _, _, s = _searcher(rng, n=300)
+    s = s.with_plan(backend=backend, chunk_size=4)
+    empty = jnp.zeros((0, 2), jnp.float32)
+    res = s.search(empty, 5)
+    assert res.ids.shape == (0, 5) and res.ids.dtype == jnp.int32
+    assert res.dists.shape == (0, 5) and res.dists.dtype == jnp.float32
+    assert res.radius.shape == (0,) and res.valid.dtype == bool
+    cls = s.classify(empty, 5)
+    assert cls.shape == (0,) and cls.dtype == jnp.int32
+
+
+def test_run_chunked_empty_direct():
+    out = run_chunked(
+        lambda q: {"x": q * 2.0, "n": jnp.sum(q, axis=1)},
+        jnp.zeros((0, 3), jnp.float32),
+        chunk_size=8,
+    )
+    assert out["x"].shape == (0, 3) and out["n"].shape == (0,)
+
+
+# ------------------------------------------------------------------- misc ----
+
+
+def test_with_plan_and_stats(rng):
+    _, _, s = _searcher(rng, n=400)
+    s2 = s.with_plan(backend="pallas", chunk_size=16)
+    assert s2.plan == api.ExecutionPlan(backend="pallas", chunk_size=16)
+    assert s2.index is s.index and s.plan.backend == "jnp"  # original untouched
+    st = s2.stats()
+    assert st["n_points"] == 400 and st["backend"] == "pallas"
+    assert st["csr_bytes"] > 0 and st["pyr_tiles_bytes"] > 0
+    assert st["levels"] == s.cfg.levels
+
+
+def test_build_defaults_to_pca_projection(rng):
+    pts = jnp.asarray(rng.normal(size=(500, 8)), jnp.float32)
+    s = api.ActiveSearcher.build(pts, cfg=GridConfig(grid_size=128, tile=16,
+                                                     window=32, row_cap=32,
+                                                     r0=8, k_slack=2.0))
+    q = pts[:4]
+    res = s.search(q, 5)
+    assert res.ids.shape == (4, 5)
+    # a stored point must find itself as its own nearest neighbor
+    np.testing.assert_array_equal(np.asarray(res.ids[:, 0]), np.arange(4))
+
+
+def test_chunked_facade_parity(rng):
+    _, _, s = _searcher(rng, n=600)
+    q = jnp.asarray(rng.normal(size=(10, 2)), jnp.float32)
+    full = s.search(q, 5)
+    chunked = s.with_plan(chunk_size=3).search(q, 5)
+    _assert_results_equal(full, chunked)
+
+
+def test_count_at_respects_chunking_and_empty(rng):
+    """count_at streams (q_grid, radius) PAIRS through plan.chunk_size —
+    bit-identical to the unchunked call — and returns an empty (0, C)
+    result for an empty batch instead of reaching a kernel."""
+    _, _, s = _searcher(rng, n=500)
+    q = jnp.asarray(rng.normal(size=(7, 2)), jnp.float32)
+    radii = jnp.asarray(rng.integers(1, s.cfg.max_radius, size=7), jnp.int32)
+    full = s.count_at(q, radii)
+    chunked = s.with_plan(chunk_size=3).count_at(q, radii)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(chunked))
+    empty = s.with_plan(chunk_size=3).count_at(
+        jnp.zeros((0, 2), jnp.float32), jnp.zeros((0,), jnp.int32)
+    )
+    assert empty.shape == (0, s.cfg.n_channels)
+
+
+def test_exact_ordered_cached_on_handle(rng):
+    """The exact backend's restored-order arrays are computed once per
+    handle, not once per call."""
+    _, _, s = _searcher(rng, n=400)
+    e = s.with_plan(backend="exact")
+    q = jnp.asarray(rng.normal(size=(3, 2)), jnp.float32)
+    first = e.search(q, 4)
+    cache = e.__dict__.get("_exact_ordered_cache")
+    assert cache is not None
+    second = e.search(q, 4)
+    assert e.__dict__["_exact_ordered_cache"] is cache  # reused, not rebuilt
+    _assert_results_equal(first, second)
+
+
+def test_exact_cache_does_not_leak_tracers(rng):
+    """Regression: memoizing the reorder while tracing (closed-over handle
+    under jit, or the B=0 eval_shape probe) must not store tracers on the
+    handle — later calls would die with UnexpectedTracerError."""
+    _, _, s = _searcher(rng, n=300)
+    e = s.with_plan(backend="exact")
+    f = jax.jit(lambda q: e.search(q, 4).ids)
+    assert f(jnp.zeros((3, 2), jnp.float32)).shape == (3, 4)
+    assert f(jnp.zeros((7, 2), jnp.float32)).shape == (7, 4)  # retrace, reuse handle
+    e2 = s.with_plan(backend="exact", chunk_size=4)
+    e2.search(jnp.zeros((0, 2), jnp.float32), 4)  # eval_shape probe path
+    res = e2.search(jnp.zeros((2, 2), jnp.float32), 4)  # must not crash
+    assert res.ids.shape == (2, 4)
+
+
+def test_with_plan_backend_switch_drops_interpret(rng):
+    """Switching backends via with_plan clears the Pallas-only interpret
+    knob instead of tripping validation (explicit interpret= still wins)."""
+    _, _, s = _searcher(rng, n=300)
+    p = s.with_plan(backend="pallas", interpret=True)
+    q = jnp.asarray(rng.normal(size=(2, 2)), jnp.float32)
+    res = p.with_plan(backend="exact").search(q, 3)  # must not raise
+    assert res.ids.shape == (2, 3)
+    assert p.with_plan(backend="jnp").plan.interpret is None
+    assert p.with_plan(backend="pallas_stacked").plan.interpret is True
+    with pytest.raises(ValueError, match="interpret"):
+        p.with_plan(backend="exact", interpret=True).search(q, 3)

@@ -33,6 +33,25 @@ def test_knn_retrieves_exact_key(rng):
     assert float(np.exp(logp[0, tok])) > 1.0 / 64
 
 
+def test_knn_logprobs_no_neighbors_is_uniform(rng):
+    """Regression: a query whose candidate window retrieves NOTHING (sparse
+    datastore) must yield the uniform distribution, not softmax-nan zeros —
+    p_knn has to normalize for every lane."""
+    keys = jnp.asarray(rng.normal(size=(32, 16)) * 0.01, jnp.float32)  # tight cluster
+    toks = jnp.asarray(rng.integers(0, 64, size=32), jnp.int32)
+    cfg = knn_lm.KNNLMConfig(k=8)
+    idx = knn_lm.build_datastore(keys, toks, cfg)
+    # one in-cluster query, one absurdly far away (projects off-grid, clips
+    # to an empty corner window)
+    h = jnp.stack([keys[0], jnp.full((16,), 1e4, jnp.float32)])
+    logp = knn_lm.knn_logprobs(idx, cfg, h, vocab_size=64)
+    p = np.exp(np.asarray(logp))
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, atol=1e-3)
+    res = knn_lm.ActiveSearcher.from_index(idx, cfg.grid).search(h, cfg.k)
+    if not bool(np.asarray(res.valid[1]).any()):  # the case under test
+        np.testing.assert_allclose(p[1], 1.0 / 64, rtol=1e-5)
+
+
 def test_interpolate_is_logaddexp(rng):
     cfg = knn_lm.KNNLMConfig(lam=0.25)
     lm = jnp.asarray(rng.normal(size=(2, 10)), jnp.float32)

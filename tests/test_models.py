@@ -119,12 +119,17 @@ def test_decode_cache_structure_matches_prefill(arch, rng, key):
     assert jax.tree.leaves(t1) == jax.tree.leaves(t2)
 
 
-def test_unrolled_matches_scanned(rng, key):
-    """scan_layers=False computes the same function (FLOP-accounting probe)."""
+def test_unrolled_matches_scanned(key):
+    """scan_layers=False computes the same function (FLOP-accounting probe).
+
+    Uses a LOCAL generator, not the shared session `rng`: the bf16
+    scan-vs-unroll comparison sits near its tolerance, so the batch must
+    not depend on how many draws earlier-collected tests consumed (adding
+    a test file used to flip this test's data and its outcome)."""
     import dataclasses
     cfg = get_smoke("internlm2-1.8b")
     params = M.init_params(key, cfg)
-    batch = _batch(cfg, rng, 2, 16)
+    batch = _batch(cfg, np.random.default_rng(7), 2, 16)
     l1, _ = M.forward(params, cfg, batch)
     cfg2 = dataclasses.replace(
         cfg, policy=dataclasses.replace(cfg.policy, scan_layers=False)
