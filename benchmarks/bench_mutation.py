@@ -1,0 +1,107 @@
+"""Streaming mutation vs full rebuild: the price of growing the datastore.
+
+Measures, at serve-relevant N:
+
+  * inserts/sec through `core.mutable.insert` (delta scatter into the CSR
+    slack + every pyramid level + dirty-tile refresh) vs re-running
+    `build_index` on the union — the headline `speedup_insert_vs_rebuild`;
+  * the same including `snapshot()` (the O(N) sort-free merge a handle pays
+    to become searchable) — `speedup_with_snapshot`;
+  * post-insert queries/sec on the incrementally grown index next to the
+    rebuilt one (identical results; the row records the parity check).
+
+Results land in BENCH_mutation.json (see REPRO_BENCH_ARTIFACTS) so CI records
+the mutation-path trajectory next to BENCH_kernels.json / BENCH_e2e.json.
+
+Env knobs:
+  REPRO_BENCH_QUICK=1      fewer repeats (N stays 100k: insert cost is
+                           N-independent, rebuild cost is the point)
+  REPRO_BENCH_ARTIFACTS=D  directory for BENCH_mutation.json (default ".")
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, timeit
+from repro import api
+from repro.core import mutable as mut
+from repro.core.grid import build_index
+
+
+def _quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    n, m, b, k = 100_000, 1024, 64, 11
+    repeats = 3 if _quick() else 5
+    cfg = api.GridConfig(grid_size=256, tile=16, window=32, row_cap=32,
+                         r0=10, k_slack=2.0)
+    base_pts = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    new_pts = jnp.asarray(rng.normal(size=(m, 2)), jnp.float32)
+    union = jnp.concatenate([base_pts, new_pts], axis=0)
+    proj = api.identity_projection(union)  # shared extents: parity-comparable
+
+    index = build_index(base_pts, cfg, proj)
+    state = mut.from_index(index, cfg)
+    q = jnp.asarray(rng.normal(size=(b, 2)), jnp.float32)
+
+    # time the FULL result pytrees (jax dispatch is async; blocking on a
+    # single leaf would omit the gathers/pyramid/tile work of either path)
+    t_rebuild = timeit(lambda: build_index(union, cfg, proj),
+                       repeats=repeats, warmup=1)
+    t_insert = timeit(lambda: mut.insert(state, cfg, new_pts),
+                      repeats=repeats, warmup=1)
+    grown = mut.insert(state, cfg, new_pts)
+    t_snapshot = timeit(lambda: mut.snapshot(grown, cfg),
+                        repeats=repeats, warmup=1)
+
+    rebuilt = build_index(union, cfg, proj)
+    s_inc = api.ActiveSearcher.from_index(mut.snapshot(grown, cfg), cfg)
+    s_reb = api.ActiveSearcher.from_index(rebuilt, cfg)
+    t_q_inc = timeit(lambda: s_inc.search(q, k).ids, repeats=repeats, warmup=1)
+    t_q_reb = timeit(lambda: s_reb.search(q, k).ids, repeats=repeats, warmup=1)
+    parity = bool(np.array_equal(np.asarray(s_inc.search(q, k).ids),
+                                 np.asarray(s_reb.search(q, k).ids)))
+
+    speedup = t_rebuild / t_insert
+    speedup_snap = t_rebuild / (t_insert + t_snapshot)
+    csv = Csv("metric,value")
+    csv.row("n_points", n)
+    csv.row("insert_batch", m)
+    csv.row("rebuild_s", f"{t_rebuild:.4f}")
+    csv.row("insert_s", f"{t_insert:.4f}")
+    csv.row("snapshot_s", f"{t_snapshot:.4f}")
+    csv.row("inserts_per_s", f"{m / t_insert:.0f}")
+    csv.row("speedup_insert_vs_rebuild", f"{speedup:.1f}x")
+    csv.row("speedup_with_snapshot", f"{speedup_snap:.1f}x")
+    csv.row("post_insert_qps", f"{b / t_q_inc:.1f}")
+    csv.row("post_rebuild_qps", f"{b / t_q_reb:.1f}")
+    csv.row("parity_incremental_vs_rebuild", parity)
+
+    results = {
+        "schema": 1, "timestamp": time.time(), "quick": _quick(),
+        "n": n, "insert_batch": m, "batch": b, "k": k,
+        "rebuild_s": t_rebuild, "insert_s": t_insert, "snapshot_s": t_snapshot,
+        "inserts_per_s": m / t_insert,
+        "speedup_insert_vs_rebuild": speedup,
+        "speedup_with_snapshot": speedup_snap,
+        "post_insert_qps": b / t_q_inc, "post_rebuild_qps": b / t_q_reb,
+        "parity_incremental_vs_rebuild": parity,
+    }
+    art_dir = os.environ.get("REPRO_BENCH_ARTIFACTS", ".")
+    path = os.path.join(art_dir, "BENCH_mutation.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"[bench_mutation] wrote {path}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,8 @@ BENCHES = [
      "benchmarks.bench_kernels"),
     ("e2e", "facade throughput per registered backend (BENCH_e2e.json)",
      "benchmarks.bench_e2e"),
+    ("mutation", "streaming insert/delete vs rebuild (BENCH_mutation.json)",
+     "benchmarks.bench_mutation"),
     ("lm_serve", "kNN-LM serving throughput",
      "benchmarks.bench_lm_serve"),
     ("roofline", "roofline table from the dry-run artifact",

@@ -1,0 +1,94 @@
+"""Docs health check (run by CI and tests/test_docs.py):
+
+  1. every RELATIVE markdown link in README.md and docs/*.md resolves to a
+     real file (anchors are stripped; http(s)/mailto links are skipped);
+  2. every ```python fenced code block in those files parses
+     (ast.parse — the cheap end of `python -m py_compile`).
+
+Exit code is non-zero with a per-problem listing on failure.
+"""
+
+from __future__ import annotations
+
+import ast
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+def doc_files(root: str) -> list[str]:
+    return [os.path.join(root, "README.md")] + sorted(
+        glob.glob(os.path.join(root, "docs", "*.md"))
+    )
+
+
+def check_links(path: str) -> list[str]:
+    problems = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path) as f:
+        text = f.read()
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(base, rel)):
+            problems.append(f"{path}: broken link -> {target}")
+    return problems
+
+
+def check_code_blocks(path: str) -> list[str]:
+    problems = []
+    lang, block, start = None, [], 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            fence = FENCE_RE.match(line.strip())
+            if fence and lang is None:
+                lang, block, start = fence.group(1).lower(), [], lineno
+            elif line.strip() == "```" and lang is not None:
+                if lang == "python":
+                    src = "".join(block)
+                    try:
+                        ast.parse(src)
+                    except SyntaxError as e:
+                        problems.append(
+                            f"{path}:{start}: python block does not parse: {e}"
+                        )
+                lang = None
+            elif lang is not None:
+                block.append(line)
+    return problems
+
+
+def main(root: str = ".") -> int:
+    problems: list[str] = []
+    n_links = n_blocks = 0
+    for path in doc_files(root):
+        if not os.path.exists(path):
+            problems.append(f"missing doc file: {path}")
+            continue
+        with open(path) as f:
+            text = f.read()
+        n_links += sum(
+            1 for t in LINK_RE.findall(text)
+            if not t.startswith(("http://", "https://", "mailto:", "#"))
+        )
+        n_blocks += len(re.findall(r"^```python", text, flags=re.M))
+        problems += check_links(path)
+        problems += check_code_blocks(path)
+    for p in problems:
+        print(f"[check_docs] {p}", file=sys.stderr)
+    if problems:
+        return 1
+    print(f"[check_docs] OK: {len(doc_files(root))} files, "
+          f"{n_links} relative links, {n_blocks} python blocks")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else "."))

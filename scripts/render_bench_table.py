@@ -1,0 +1,154 @@
+"""Render the CI perf artifacts (BENCH_kernels.json / BENCH_e2e.json /
+BENCH_mutation.json) into the markdown throughput table embedded in
+README.md between the `<!-- BENCH TABLE BEGIN/END -->` markers.
+
+  python scripts/render_bench_table.py --artifacts bench-artifacts
+  python scripts/render_bench_table.py --artifacts bench-artifacts --check
+
+--check regenerates the table and fails (exit 1) when the README's table
+STRUCTURE drifted — rows/columns/labels out of sync with what the current
+benchmarks emit (numeric cells are masked before comparing, so timing noise
+never fails CI; adding a backend or a bench without re-rendering does).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+BEGIN = "<!-- BENCH TABLE BEGIN -->"
+END = "<!-- BENCH TABLE END -->"
+NUM_RE = re.compile(r"-?\d[\d,]*\.?\d*x?")
+
+
+def _load(art_dir: str, name: str) -> dict | None:
+    path = os.path.join(art_dir, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def render(art_dir: str) -> str:
+    rows = [
+        "| bench | metric | value |",
+        "|---|---|---|",
+    ]
+
+    kern = _load(art_dir, "BENCH_kernels.json")
+    if kern and "count_paths" in kern:
+        cp = kern["count_paths"]
+        rows.append(f"| kernels | stacked counts/s (L={cp['levels']}) | "
+                    f"{cp['stacked_counts_per_s']:,.0f} |")
+        rows.append(f"| kernels | level-scheduled counts/s (L={cp['levels']}) | "
+                    f"{cp['level_scheduled_counts_per_s']:,.0f} |")
+        rows.append(f"| kernels | level-scheduler speedup | "
+                    f"{cp['speedup']:.1f}x |")
+
+    e2e = _load(art_dir, "BENCH_e2e.json")
+    if e2e:
+        for name, rec in sorted(e2e.get("backends", {}).items()):
+            rows.append(
+                f"| e2e | `{name}` queries/s | {rec['queries_per_s']:,.1f} |"
+            )
+
+    mu = _load(art_dir, "BENCH_mutation.json")
+    if mu:
+        rows.append(f"| mutation | inserts/s (batch {mu['insert_batch']}, "
+                    f"N={mu['n']:,}) | {mu['inserts_per_s']:,.0f} |")
+        rows.append(f"| mutation | insert vs rebuild speedup | "
+                    f"{mu['speedup_insert_vs_rebuild']:.1f}x |")
+        rows.append(f"| mutation | insert+snapshot vs rebuild | "
+                    f"{mu['speedup_with_snapshot']:.1f}x |")
+        rows.append(f"| mutation | post-insert queries/s | "
+                    f"{mu['post_insert_qps']:,.1f} |")
+        rows.append(f"| mutation | parity vs rebuild | "
+                    f"{mu['parity_incremental_vs_rebuild']} |")
+
+    if len(rows) == 2:
+        rows.append("| (no artifacts found) | — | — |")
+    return "\n".join(rows)
+
+
+def _mask_numbers(table: str) -> str:
+    """Mask the volatile cells (numbers AND parity booleans) so the drift
+    check only fires on structure, never on timing noise — and never invites
+    committing a parity regression as a 'docs sync' (see _parity_problems,
+    which fails those loudly instead)."""
+    return re.sub(r"\b(True|False)\b", "·", NUM_RE.sub("·", table))
+
+
+def _parity_problems(art_dir: str) -> list[str]:
+    problems = []
+    mu = _load(art_dir, "BENCH_mutation.json")
+    if mu and mu.get("parity_incremental_vs_rebuild") is not True:
+        problems.append("BENCH_mutation.json: incremental insert does NOT "
+                        "match rebuild (parity_incremental_vs_rebuild)")
+    e2e = _load(art_dir, "BENCH_e2e.json")
+    for name, rec in sorted((e2e or {}).get("backends", {}).items()):
+        if rec.get("parity_vs_jnp") is False:
+            problems.append(f"BENCH_e2e.json: backend {name!r} diverged "
+                            f"from the jnp reference (parity_vs_jnp)")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default=".",
+                    help="directory holding the BENCH_*.json artifacts")
+    ap.add_argument("--readme", default="README.md")
+    ap.add_argument("--check", action="store_true",
+                    help="fail when the README table structure drifted "
+                         "instead of rewriting it")
+    args = ap.parse_args()
+
+    table = render(args.artifacts)
+    with open(args.readme) as f:
+        doc = f.read()
+    if BEGIN not in doc or END not in doc:
+        print(f"[render_bench_table] {args.readme} is missing the "
+              f"{BEGIN} / {END} markers", file=sys.stderr)
+        return 1
+
+    block_re = re.compile(re.escape(BEGIN) + r"\n(.*?)" + re.escape(END),
+                          flags=re.S)
+    current = block_re.search(doc).group(1).strip()
+
+    if args.check:
+        parity = _parity_problems(args.artifacts)
+        if parity:
+            print("[render_bench_table] PARITY REGRESSION (this is a "
+                  "correctness failure, NOT a docs-sync problem — do not "
+                  "re-render the table to silence it):", file=sys.stderr)
+            for p in parity:
+                print(f"  {p}", file=sys.stderr)
+            return 1
+        if _mask_numbers(current) != _mask_numbers(table):
+            print("[render_bench_table] README bench table is out of sync "
+                  "with the benchmark output (structure drift).  Run:\n"
+                  "  python scripts/render_bench_table.py --artifacts <dir>\n"
+                  "and commit the result.  Diff (numbers masked):",
+                  file=sys.stderr)
+            for a, b in zip(
+                (_mask_numbers(current) + "\n" * 99).splitlines(),
+                (_mask_numbers(table) + "\n" * 99).splitlines(),
+            ):
+                if a != b:
+                    print(f"  README : {a}\n  bench  : {b}", file=sys.stderr)
+            return 1
+        print("[render_bench_table] README table structure is in sync")
+        return 0
+
+    doc = block_re.sub(f"{BEGIN}\n{table}\n{END}", doc)
+    with open(args.readme, "w") as f:
+        f.write(doc)
+    print(f"[render_bench_table] wrote {len(table.splitlines())} rows "
+          f"into {args.readme}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

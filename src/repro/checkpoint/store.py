@@ -102,6 +102,30 @@ class CheckpointManager:
         steps = self.list_steps()
         return steps[-1] if steps else None
 
+    def restore_arrays(self, step: int) -> dict[str, np.ndarray]:
+        """Raw {key: array} contents of a step — no structure donor needed.
+
+        This is the restore path for states whose SHAPES are not known up
+        front (e.g. a mutable grid index whose slack layout grew since the
+        code was written): the caller reconstructs the object from names."""
+        path = os.path.join(self.dir, f"step_{step}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            return {k: z[k] for k in z.files}
+
+    def save_mutable_index(self, step: int, state: Any,
+                           blocking: bool = False) -> None:
+        """Persist a `core.mutable.MutableIndex` (slack layout, spill log,
+        pyramid, tiles — everything needed to keep mutating after restart)."""
+        from repro.core import mutable as mut
+
+        self.save(step, mut.state_to_tree(state), blocking=blocking)
+
+    def restore_mutable_index(self, step: int) -> Any:
+        """Inverse of `save_mutable_index` — shape-free (see restore_arrays)."""
+        from repro.core import mutable as mut
+
+        return mut.state_from_tree(self.restore_arrays(step))
+
     def restore(self, step: int, like: Any, shardings: Any | None = None) -> Any:
         """Rebuild the pytree of `like` (structure donor).  If `shardings`
         (same structure) is given, leaves are device_put with it — this is the

@@ -24,9 +24,11 @@ through fixed-size kernel invocations (one static shape, bounded VMEM)
 instead of materializing giant per-batch intermediates.
 
 Semantics are bit-for-bit identical to the jnp path (the kernels share their
-oracles' contracts; see tests/test_batched_backend.py).  Entry points mirror
-`active_search.search` / `.classify` and are selected there via
-`backend="pallas"`.
+oracles' contracts; see tests/test_batched_backend.py).  This module is the
+implementation behind the `pallas` backend of the `repro.api` registry —
+hold an `ActiveSearcher` with `ExecutionPlan(backend="pallas")` instead of
+calling these entry points directly (the old `active_search.search(
+backend=...)` kwarg path survives only as a deprecation shim).
 """
 
 from __future__ import annotations
@@ -307,7 +309,9 @@ def search(
     chunk_size: int | None = None,
 ) -> SearchResult:
     """Batched kernel-backed active search: queries (B, d) -> SearchResult
-    with leading B.  Same contract as `active_search.search`.
+    with leading B.  Same result contract as the facade's
+    `ActiveSearcher.search` (repro.api), which is how callers should reach
+    this path (`ExecutionPlan(backend="pallas")`).
 
     chunk_size streams the batch through fixed-size kernel invocations (one
     static shape, bounded VMEM) — results are bit-identical for any value.
@@ -358,9 +362,9 @@ def classify(
     interpret: bool | None = None,
     chunk_size: int | None = None,
 ) -> jax.Array:
-    """Batched kNN classification — same contract as
-    `active_search.classify`, with every count pass going through the
-    level-scheduled tile_count_multilevel kernel."""
+    """Batched kNN classification — same result contract as the facade's
+    `ActiveSearcher.classify` (repro.api), with every count pass going
+    through the level-scheduled tile_count_multilevel kernel."""
     return run_chunked(
         lambda q: _classify_impl(index, cfg, q, k, mode, interpret),
         queries,

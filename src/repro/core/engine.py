@@ -14,6 +14,8 @@ them into a FAISS-style handle:
   preds = s.classify(queries, k=11)
   cnts  = s.count_at(queries, radii)         # (B, C) circle counts
   s2    = s.with_plan(backend="exact")       # same index, new execution plan
+  s3    = s.insert(more_points)              # streaming growth (core/mutable.py)
+  live  = s3.delete(stale_ids).snapshot()    # frozen handle, isolated from s3
 
 HOW a search executes lives entirely in the frozen `ExecutionPlan`
 (backend name, Pallas interpret override, chunked streaming, donate-able
@@ -98,13 +100,17 @@ class BackendImpl:
 
     Any of the three may be None (e.g. `pallas_stacked` is a count-only
     benchmark baseline); the facade raises eagerly when an op is missing.
-    `supports_interpret` gates `plan.interpret`.
+    `supports_interpret` gates `plan.interpret`.  `requires_mesh` marks
+    backends that only work on a `build_sharded` handle (mesh + axis), so
+    eager validators (e.g. serve's CLI check) can reject them up front
+    without name-matching.
     """
 
     search: Callable[..., SearchResult] | None = None
     classify: Callable[..., jax.Array] | None = None
     count_at: Callable[..., jax.Array] | None = None
     supports_interpret: bool = False
+    requires_mesh: bool = False
     description: str = ""
 
 
@@ -153,6 +159,9 @@ class ActiveSearcher:
     plan: ExecutionPlan = ExecutionPlan()
     mesh: Any = None
     axis: str | None = None
+    # streaming-mutation state (core/mutable.py): None for frozen handles;
+    # set by insert/delete so successive mutations reuse the slack layout
+    mutable: Any = None
 
     # -------------------------------------------------------- construction --
     @classmethod
@@ -224,6 +233,64 @@ class ActiveSearcher:
                 overrides = {**overrides, "interpret": None}
         new = plan if plan is not None else dataclasses.replace(self.plan, **overrides)
         return dataclasses.replace(self, plan=new)
+
+    # ------------------------------------------------------------- mutation --
+    def _mutable_state(self):
+        """Current mutation state, opening the dense index on first use."""
+        from repro.core import mutable as mut
+
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "insert/delete on a sharded handle is not supported yet; "
+                "mutate per-shard indexes and re-merge with build_sharded"
+            )
+        if self.mutable is not None:
+            return self.mutable
+        return mut.from_index(self.index, self.cfg)
+
+    def insert(
+        self,
+        points: jax.Array,
+        *,
+        labels: jax.Array | None = None,
+        ids: jax.Array | None = None,
+    ) -> "ActiveSearcher":
+        """Streaming insert: delta-update the grid, pyramid, and dirty tiles
+        (core/mutable.py) and return a NEW handle over the grown index.
+
+        This handle is unchanged (handles are immutable); the returned one
+        carries the refreshed dense snapshot plus the slack state, so chained
+        inserts keep reusing free bucket slots.  Being a new object, it also
+        starts with a cold memoized exact-order cache — the `exact` backend
+        re-derives its original-order view over the grown contents instead of
+        serving stale memoized arrays.  Results are bit-identical to
+        rebuilding from the union of the points (tests/test_mutable.py).
+        """
+        from repro.core import mutable as mut
+
+        state = mut.insert(self._mutable_state(), self.cfg, points,
+                           labels=labels, ids=ids)
+        return dataclasses.replace(
+            self, index=mut.snapshot(state, self.cfg), mutable=state
+        )
+
+    def delete(self, ids: jax.Array) -> "ActiveSearcher":
+        """Delete by global point id; returns a NEW handle (see `insert`)."""
+        from repro.core import mutable as mut
+
+        state = mut.delete(self._mutable_state(), self.cfg, ids)
+        return dataclasses.replace(
+            self, index=mut.snapshot(state, self.cfg), mutable=state
+        )
+
+    def snapshot(self) -> "ActiveSearcher":
+        """A frozen handle over the current contents.
+
+        Drops the slack state: later insert/delete on either handle cannot
+        affect the other (delta updates build NEW arrays — jax arrays are
+        immutable — so a snapshot taken mid-serving stays valid while the
+        source keeps mutating)."""
+        return dataclasses.replace(self, mutable=None)
 
     # ------------------------------------------------------------- dispatch --
     def _impl(self, op: str) -> Callable:
@@ -321,6 +388,15 @@ class ActiveSearcher:
             "pyramid_bytes": int(pyramid_bytes),
             "pyr_tiles_bytes": int(tile_bytes),
             "csr_bytes": int(csr_bytes),
+            "mutable": self.mutable is not None,
+            **(
+                {
+                    "free_bucket_slots": int(self.mutable.free_bucket_slots),
+                    "spill_used": int(self.mutable.spill_used),
+                    "spill_capacity": self.mutable.spill_capacity,
+                }
+                if self.mutable is not None else {}
+            ),
         }
 
 
@@ -487,7 +563,7 @@ register_backend("exact", BackendImpl(
                 "comparator (core/exact.py)",
 ))
 register_backend("sharded", BackendImpl(
-    search=_sharded_search, classify=_sharded_classify,
+    search=_sharded_search, classify=_sharded_classify, requires_mesh=True,
     description="per-shard searchers under shard_map + all_gather top-k "
                 "merge (core/distributed.py; build via build_sharded)",
 ))

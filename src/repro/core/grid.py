@@ -211,7 +211,8 @@ def base_counts(index: GridIndex) -> jax.Array:
 
 
 def validate_invariants(index: GridIndex, cfg: GridConfig) -> dict[str, bool]:
-    """Cheap structural invariants (used by property tests)."""
+    """Cheap structural invariants (used by property tests, and by the
+    mutable-index suite on delta-updated snapshots)."""
     n = index.n_points
     offs = index.offsets
     counts_from_offsets = offs[-1] == n
@@ -219,9 +220,28 @@ def validate_invariants(index: GridIndex, cfg: GridConfig) -> dict[str, bool]:
     pyramid_mass = all(int(level.sum()) == n for level in index.pyramid)
     cid = cell_id_of(index.coords_sorted, cfg.padded_size)
     sorted_ok = bool(jnp.all(cid[1:] >= cid[:-1]))
+    # base level agrees with the CSR bucket sizes, and every coarser level is
+    # exactly the 2x2 sum of the level below it (delta updates must keep the
+    # whole mip chain consistent, not just the base)
+    base_ok = bool(
+        jnp.all(index.pyramid[0].sum(axis=-1).reshape(-1) == offs[1:] - offs[:-1])
+    )
+    chain_ok = all(
+        bool(jnp.all(build_pyramid(index.pyramid[lv], 2)[1] == index.pyramid[lv + 1]))
+        for lv in range(len(index.pyramid) - 1)
+    )
+    tiles_ok = (
+        index.pyr_tiles is None
+        or bool(
+            jnp.all(index.pyr_tiles == flatten_pyramid_tiles(index.pyramid, cfg.tile))
+        )
+    )
     return {
         "offsets_end_is_n": bool(counts_from_offsets),
         "offsets_monotone": monotone,
         "pyramid_mass_is_n": pyramid_mass,
         "cells_sorted": sorted_ok,
+        "base_matches_offsets": base_ok,
+        "pyramid_chain_consistent": chain_ok,
+        "tiles_match_pyramid": tiles_ok,
     }

@@ -49,6 +49,30 @@ def build_datastore(
     return build_index(keys, cfg.grid, proj, labels=next_tokens.astype(jnp.int32))
 
 
+def extend_datastore(
+    index: GridIndex, cfg: KNNLMConfig, keys: jax.Array, next_tokens: jax.Array
+) -> GridIndex:
+    """Grow the datastore ONLINE with fresh (hidden, next-token) pairs.
+
+    Serving harvests these from its own decode stream (`launch/serve.py
+    --knn-online`): the new keys are projected with the datastore's EXISTING
+    projection (no PCA re-fit — keys far outside the fitted extents clamp to
+    the grid edge, which active search tolerates) and delta-applied via
+    `core.mutable` instead of rebuilding the index.
+
+    This one-shot helper re-opens the slack layout each call; a caller that
+    grows REPEATEDLY should hold the state across batches instead (an
+    `ActiveSearcher` handle via `.insert`, or a `core.mutable.MutableIndex`
+    directly, as serve's Engine does)."""
+    from repro.core import mutable as mut
+
+    state = mut.from_index(index, cfg.grid)
+    state = mut.insert(
+        state, cfg.grid, keys, labels=jnp.asarray(next_tokens, jnp.int32)
+    )
+    return mut.snapshot(state, cfg.grid)
+
+
 @partial(jax.jit, static_argnames=("cfg", "vocab_size"))
 def knn_logprobs(
     index: GridIndex, cfg: KNNLMConfig, hidden: jax.Array, vocab_size: int

@@ -65,6 +65,27 @@ def build_memory_index(
     return build_index(keys, cfg.grid, proj)
 
 
+def extend_memory_index(
+    index: GridIndex, cfg: RetrievalMemoryConfig, new_keys: jax.Array
+) -> GridIndex:
+    """Append (key, position) pairs ONLINE — the streaming-decode path.
+
+    Positions continue from the current end of the memory (ids are the
+    paper-side global point ids, which this module uses as token positions),
+    and the grid/pyramid are delta-updated via `core.mutable` instead of
+    rebuilt — `make_projection` is data-independent precisely so extents
+    never need re-fitting.  Bit-identical to `build_memory_index` over the
+    concatenated keys (tests/test_mutable.py).
+
+    One-shot helper: re-opens the slack layout each call.  A decode loop
+    appending every step should hold the `core.mutable.MutableIndex` (or an
+    `ActiveSearcher` via `.insert`) across steps to reuse free slots."""
+    from repro.core import mutable as mut
+
+    state = mut.from_index(index, cfg.grid)
+    return mut.snapshot(mut.insert(state, cfg.grid, new_keys), cfg.grid)
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def retrieve_positions(
     index: GridIndex, cfg: RetrievalMemoryConfig, q_sum: jax.Array

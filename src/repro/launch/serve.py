@@ -55,6 +55,10 @@ class Engine:
             cfg, mesh
         )
         self._compiled = {}
+        # slack state for --knn-online growth: opened on the first
+        # extend_datastore and kept across batches, so chained inserts hit
+        # free bucket slots instead of re-deriving the layout every time
+        self._ds_state = None
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
 
     def _decode_fn(self, caches, token, pos):
@@ -69,7 +73,11 @@ class Engine:
         return self._compiled[key]
 
     def generate(self, prompts: np.ndarray, max_new: int | None = None):
-        """prompts: (B, S) int32.  Returns (tokens (B, new), hiddens (B, new, d))."""
+        """prompts: (B, S) int32.  Returns (tokens (B, new), hiddens) where
+        hiddens is a LIST of new-1 per-step (B, d) arrays — hiddens[j] is the
+        state that predicted tokens[:, j+1] (the prefill hidden that produced
+        tokens[:, 0] is not collected), the pairing extend_datastore relies
+        on."""
         sc = self.sc
         max_new = max_new or sc.max_new_tokens
         b, s = prompts.shape
@@ -102,6 +110,30 @@ class Engine:
         self.stats["tokens"] += b * max_new
         toks = jnp.stack(out_tokens, axis=1)
         return np.asarray(toks), out_hidden
+
+    def extend_datastore(self, hiddens, tokens) -> int:
+        """Grow the kNN-LM datastore ONLINE from this engine's own decode
+        stream: `hiddens` is the per-step hidden list from `generate`,
+        `tokens` the (B, new) emitted tokens.  Pairs (h_t -> token_{t+1})
+        are delta-inserted (core/mutable.py via knn_lm.extend_datastore) —
+        no rebuild, no PCA re-fit — and the next `generate` call searches
+        the grown datastore.  Returns the number of pairs added."""
+        from repro.core import mutable as mut
+
+        if self.datastore is None or self.sc.knn is None:
+            raise ValueError("extend_datastore needs a kNN-LM datastore")
+        if not hiddens:
+            return 0
+        keys = jnp.concatenate(
+            [h.astype(jnp.float32) for h in hiddens], axis=0
+        )  # (B*(new-1), d)
+        vals = jnp.asarray(tokens[:, 1:], jnp.int32).T.reshape(-1)
+        grid = self.sc.knn.grid
+        if self._ds_state is None:
+            self._ds_state = mut.from_index(self.datastore, grid)
+        self._ds_state = mut.insert(self._ds_state, grid, keys, labels=vals)
+        self.datastore = mut.snapshot(self._ds_state, grid)
+        return int(keys.shape[0])
 
     def _pick(self, lm_logits, hidden, key, step):
         if self.datastore is not None and self.sc.knn is not None:
@@ -165,7 +197,16 @@ def main() -> None:
         help="stream datastore searches through fixed-size query chunks "
              "(bounds kernel VMEM at serve scale; results are identical)",
     )
+    ap.add_argument(
+        "--knn-online", action="store_true",
+        help="grow the kNN-LM datastore DURING serving: after each batch, "
+             "delta-insert the decoded (hidden, next-token) pairs "
+             "(core/mutable.py) so later batches retrieve from them — no "
+             "rebuild between batches",
+    )
     args = ap.parse_args()
+    if args.knn_online and not args.knn:
+        raise SystemExit("--knn-online requires --knn")
     if args.knn:
         # fail on a bad backend name NOW, not after model init + datastore
         # build; count-only backends can't serve searches either
@@ -173,12 +214,16 @@ def main() -> None:
             impl = api.get_backend(args.knn_backend)
         except ValueError as e:
             raise SystemExit(f"--knn-backend: {e}") from None
-        if impl.search is None:
+        if impl.search is None or impl.requires_mesh:
+            # mesh-requiring backends (sharded) implement search() but only
+            # on a build_sharded handle; the datastore handle here is
+            # from_index-built, so it would fail after model init
             searchable = [n for n in api.registered_backends()
-                          if api.get_backend(n).search is not None]
+                          if api.get_backend(n).search is not None
+                          and not api.get_backend(n).requires_mesh]
             raise SystemExit(
-                f"--knn-backend {args.knn_backend!r} does not implement "
-                f"search(); pick one of {searchable}"
+                f"--knn-backend {args.knn_backend!r} cannot serve datastore "
+                f"searches; pick one of {searchable}"
             )
 
     cfg = get_smoke(args.arch)
@@ -202,7 +247,15 @@ def main() -> None:
     engine = Engine(cfg, params, mesh, ServeConfig(knn=knn_cfg), datastore)
     prompts = rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt_len),
                            dtype=np.int32)
-    toks, _ = engine.generate(prompts, args.max_new)
+    toks, hiddens = engine.generate(prompts, args.max_new)
+    if args.knn_online:
+        added = engine.extend_datastore(hiddens, toks)
+        print(f"[serve] datastore grew online: +{added} pairs -> "
+              f"{engine.datastore.n_points} keys (no rebuild)")
+        prompts2 = rng.integers(
+            0, cfg.vocab_size, size=(args.batch, args.prompt_len), dtype=np.int32
+        )
+        toks, _ = engine.generate(prompts2, args.max_new)
     s = engine.stats
     print(f"[serve] generated {toks.shape} tokens")
     print(

@@ -1,0 +1,45 @@
+"""Docs stay healthy: relative links in README/docs resolve and python code
+blocks parse (the same check CI runs via scripts/check_docs.py)."""
+
+import importlib.util
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_check_docs():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", os.path.join(ROOT, "scripts", "check_docs.py")
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_links_resolve_and_code_blocks_parse(capsys):
+    mod = _load_check_docs()
+    rc = mod.main(ROOT)
+    err = capsys.readouterr().err
+    assert rc == 0, f"docs check failed:\n{err}"
+
+
+def test_docs_exist_and_are_linked_from_readme():
+    for name in ("ARCHITECTURE.md", "API.md"):
+        assert os.path.exists(os.path.join(ROOT, "docs", name))
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    assert "docs/ARCHITECTURE.md" in readme and "docs/API.md" in readme
+
+
+def test_check_docs_catches_broken_link_and_bad_python(tmp_path):
+    """The checker actually fails on problems (not vacuously green)."""
+    mod = _load_check_docs()
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text(
+        "[missing](docs/NOPE.md)\n\n```python\ndef broken(:\n```\n"
+    )
+    problems = mod.check_links(str(tmp_path / "README.md"))
+    assert any("NOPE.md" in p for p in problems)
+    problems = mod.check_code_blocks(str(tmp_path / "README.md"))
+    assert any("does not parse" in p for p in problems)
+    assert mod.main(str(tmp_path)) == 1
