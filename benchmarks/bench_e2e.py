@@ -4,9 +4,13 @@ through the one `ActiveSearcher` handle, plus the facade-overhead delta
 
 The overhead delta is the price of the facade itself — plan validation,
 device placement, the chunking wrapper — measured against the exact same
-underlying impl, so it should sit in the noise floor.  Results land in
-BENCH_e2e.json (next to BENCH_kernels.json; see REPRO_BENCH_ARTIFACTS) so
-CI records per-backend throughput on every push.
+underlying impl, so it should sit in the noise floor.  Each backend also
+records its candidate-stage PEAK intermediate bytes: the gather-based paths
+(jnp, pallas_gather) materialize the full (B, w*row_cap) four-field window
+in HBM before ranking, while the fused pallas default only writes the
+(B, k) result pair.  Results land in BENCH_e2e.json (next to
+BENCH_kernels.json; see REPRO_BENCH_ARTIFACTS) so CI records per-backend
+throughput on every push.
 
 Env knobs:
   REPRO_BENCH_QUICK=1      shrink to CI-friendly sizes
@@ -43,25 +47,41 @@ def main() -> None:
     q = jnp.asarray(rng.normal(size=(b, 2)), jnp.float32)
 
     csv = Csv("backend,queries_per_s,facade_us_per_q,facade_overhead_us_per_q,"
-              "parity_vs_jnp")
-    results: dict = {"schema": 1, "timestamp": time.time(), "quick": _quick(),
+              "cand_stage_bytes,parity_vs_jnp")
+    results: dict = {"schema": 2, "timestamp": time.time(), "quick": _quick(),
                      "n": n, "batch": b, "k": k, "backends": {}}
     # the jnp reference FIRST (registered_backends() is sorted, so relying on
     # iteration order would leave earlier backends without a reference); the
     # exact comparator ranks the whole datastore, so only grid-backed
     # backends are expected to agree bit-for-bit — others record parity None
     ref_ids = np.asarray(searcher.search(q, k).ids)
-    grid_backed = ("jnp", "pallas")
+    grid_backed = ("jnp", "pallas", "pallas_gather")
     repeats = 3 if _quick() else 5
+
+    # candidate-stage PEAK intermediate per full batch: the gather-based
+    # paths materialize (B, w*row_cap) of points(f32 d) + coords(f32 2) +
+    # labels(i32) + ids(i32) + valid(bool) before ranking; the fused
+    # csr_candidate_topk path only ever writes the (B, k) result pair
+    d = int(pts.shape[1])
+    cand = cfg.window * cfg.row_cap
+    gather_bytes = b * cand * (4 * d + 8 + 4 + 4 + 1)
+    fused_bytes = b * k * (4 + 4)
+    cand_bytes = {"jnp": gather_bytes, "pallas_gather": gather_bytes,
+                  "pallas": fused_bytes}
+    results["candidate_intermediate"] = {
+        "gather_bytes": gather_bytes,
+        "fused_bytes": fused_bytes,
+        "reduction_x": gather_bytes / fused_bytes,
+    }
     for name in api.registered_backends():
         impl = api.get_backend(name)
         if impl.search is None:
-            csv.row(name, "-", "-", "-", "count-only")
+            csv.row(name, "-", "-", "-", "-", "count-only")
             continue
         if name == "sharded":
             # needs a mesh-built handle (ActiveSearcher.build_sharded);
             # the single-host CI bench skips it rather than faking a mesh
-            csv.row(name, "-", "-", "-", "skipped (needs mesh)")
+            csv.row(name, "-", "-", "-", "-", "skipped (needs mesh)")
             continue
         planned = searcher.with_plan(backend=name)
         t_facade = timeit(lambda: planned.search(q, k).ids,
@@ -79,10 +99,13 @@ def main() -> None:
             "facade_s": t_facade,
             "direct_s": t_direct,
             "facade_overhead_s": overhead,
+            "candidate_stage_bytes": cand_bytes.get(name),
             "parity_vs_jnp": parity,
         }
+        cb = cand_bytes.get(name)
         csv.row(name, f"{b / t_facade:.1f}", f"{t_facade * 1e6 / b:.1f}",
                 f"{overhead * 1e6 / b:+.1f}",
+                "-" if cb is None else f"{cb:,}",
                 "n/a" if parity is None else parity)
 
     art_dir = os.environ.get("REPRO_BENCH_ARTIFACTS", ".")

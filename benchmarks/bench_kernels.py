@@ -74,6 +74,7 @@ def main() -> None:
         csv.row("brute_knn", f"B={b} N={n} d={d} k={k}", f"{t*1e6/b:.1f}", ok)
 
     results["count_paths"] = bench_count_paths(rng, csv)
+    results["candidate_paths"] = bench_candidate_paths(rng, csv)
     if not _quick():
         results["search_backends"] = bench_search_backends(rng, csv)
 
@@ -139,6 +140,80 @@ def bench_count_paths(rng, csv: Csv) -> dict:
             f"{t_multi*1e6/b:.1f}", parity)
     print(f"[bench_kernels] level scheduler speedup over stacked "
           f"(L={cfg.levels}): {out['speedup']:.2f}x", flush=True)
+    return out
+
+
+def bench_candidate_paths(rng, csv: Csv) -> dict:
+    """Fused csr_candidate_topk vs the gather pipeline (one-shot window
+    gather + dense candidate_topk) — the candidate stage in isolation.
+
+    The CPU interpreter emulates the fused kernel's per-row DMAs element by
+    element, so the interpret-mode RATIO is not hardware-meaningful (unlike
+    count_paths) — run this sweep with REPRO_PALLAS_INTERPRET=0 on a TPU to
+    read the real speedup.  What IS meaningful everywhere: the recorded
+    bit-parity of (dists, global indices) between the two paths, and the
+    candidate-stage HBM intermediate each needs — the gather path
+    materializes (B, w*row_cap) x four record fields; the fused path writes
+    only the (B, k) result pair."""
+    n, d, b, w, rcap, k = (10_000, 8, 8, 16, 16, 8) if _quick() else \
+        (100_000, 16, 32, 32, 32, 16)
+    store = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    starts = jnp.asarray(rng.integers(0, n - rcap, size=(b, w)), jnp.int32)
+    ends = jnp.minimum(
+        starts + jnp.asarray(rng.integers(0, rcap + 4, size=(b, w)), jnp.int32),
+        n,
+    )
+
+    def fused():
+        return ops.csr_candidate_topk(
+            store, starts, ends, q, k, n, rcap, interpret=True
+        )
+
+    def gather():
+        s_cl = jnp.clip(starts, 0, n - rcap)
+        j = s_cl[:, :, None] + jnp.arange(rcap, dtype=jnp.int32)
+        ok = (j >= starts[:, :, None]) & (j < ends[:, :, None]) & (j < n)
+        flat = j.reshape(b, w * rcap)
+        cand = jnp.take(store, flat, axis=0)
+        dd, di = ops.candidate_topk(
+            cand, ok.reshape(b, w * rcap), q, k, d_chunk=d, interpret=True
+        )
+        dgi = jnp.where(
+            di >= 0, jnp.take_along_axis(flat, jnp.maximum(di, 0), axis=1), -1
+        )
+        return dd, dgi
+
+    t_fused = timeit(lambda: fused()[0], repeats=5, warmup=1)
+    t_gather = timeit(lambda: gather()[0], repeats=5, warmup=1)
+    # the inter-kernel bit contract (fused == gather+dense candidate_topk,
+    # global indices included), checked on the SAME closures that were just
+    # timed — exact at ANY d, unlike the big-tensor jnp oracle which can sit
+    # 1 ulp away at larger d (see tests/test_kernels.py)
+    gd, gi = fused()
+    dd, dgi = gather()
+    parity = bool(np.array_equal(np.asarray(gd), np.asarray(dd))
+                  and np.array_equal(np.asarray(gi), np.asarray(dgi)))
+    # per-field record bytes of the pipeline-level intermediate: points(f32 d)
+    # + coords(f32 2) + labels(i32) + ids(i32) + valid(bool)
+    gather_bytes = b * w * rcap * (4 * d + 8 + 4 + 4 + 1)
+    fused_bytes = b * k * (4 + 4)
+    out = {
+        "n": n, "d": d, "batch": b, "window": w, "row_cap": rcap, "k": k,
+        "fused_cands_per_s": b / t_fused,
+        "gather_cands_per_s": b / t_gather,
+        "gather_intermediate_bytes": gather_bytes,
+        "fused_intermediate_bytes": fused_bytes,
+        "intermediate_bytes_reduction": gather_bytes / fused_bytes,
+        "parity": parity,
+    }
+    csv.row("candidate_fused_csr_topk", f"N={n} B={b} w={w} cap={rcap} k={k}",
+            f"{t_fused*1e6/b:.1f}", parity)
+    csv.row("candidate_gather_topk", f"N={n} B={b} w={w} cap={rcap} k={k}",
+            f"{t_gather*1e6/b:.1f}", parity)
+    print(f"[bench_kernels] candidate-stage intermediate bytes: "
+          f"{gather_bytes:,} (gather) -> {fused_bytes:,} (fused), "
+          f"{out['intermediate_bytes_reduction']:.0f}x smaller", flush=True)
     return out
 
 

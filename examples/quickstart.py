@@ -48,8 +48,10 @@ print("Eq.1 radius/iters:", np.asarray(res.radius), np.asarray(res.iters))
 # --- same index, kernel-backed plan -----------------------------------------
 # backend="pallas" runs the Eq.-1 loop on the level-scheduled
 # kernels.tile_count_multilevel (one pallas_call per iteration counts every
-# query from its own pyramid level), gathers the CSR window in one batched
-# take, and re-ranks with the fused candidate_topk kernel (interpret-mode on
+# query from its own pyramid level), then ranks candidates with the FUSED
+# kernels.csr_candidate_topk: window spans are scalar-prefetched and
+# candidate rows stream straight from the CSR store into VMEM, so no
+# (B, window*row_cap) intermediate is ever materialized (interpret-mode on
 # CPU; compiles to Mosaic on TPU with REPRO_PALLAS_INTERPRET=0).  Results
 # are identical to the jnp plan; chunk_size= streams big batches through
 # fixed-shape kernel invocations without changing any result.

@@ -47,12 +47,25 @@ def render(art_dir: str) -> str:
                     f"{cp['level_scheduled_counts_per_s']:,.0f} |")
         rows.append(f"| kernels | level-scheduler speedup | "
                     f"{cp['speedup']:.1f}x |")
+    if kern and "candidate_paths" in kern:
+        cd = kern["candidate_paths"]
+        rows.append(f"| kernels | fused csr-topk cands/s (interpret) | "
+                    f"{cd['fused_cands_per_s']:,.0f} |")
+        rows.append(f"| kernels | gather+topk cands/s (interpret) | "
+                    f"{cd['gather_cands_per_s']:,.0f} |")
+        rows.append(f"| kernels | candidate-stage bytes, gather → fused | "
+                    f"{cd['gather_intermediate_bytes']:,} → "
+                    f"{cd['fused_intermediate_bytes']:,} "
+                    f"({cd['intermediate_bytes_reduction']:,.0f}x) |")
 
     e2e = _load(art_dir, "BENCH_e2e.json")
     if e2e:
         for name, rec in sorted(e2e.get("backends", {}).items()):
+            cb = rec.get("candidate_stage_bytes")
+            extra = "" if cb is None else f" (cand. bytes {cb:,})"
             rows.append(
-                f"| e2e | `{name}` queries/s | {rec['queries_per_s']:,.1f} |"
+                f"| e2e | `{name}` queries/s | "
+                f"{rec['queries_per_s']:,.1f}{extra} |"
             )
 
     mu = _load(art_dir, "BENCH_mutation.json")
@@ -83,6 +96,11 @@ def _mask_numbers(table: str) -> str:
 
 def _parity_problems(art_dir: str) -> list[str]:
     problems = []
+    kern = _load(art_dir, "BENCH_kernels.json")
+    if kern and kern.get("candidate_paths", {}).get("parity") is False:
+        problems.append("BENCH_kernels.json: fused csr_candidate_topk "
+                        "diverged from the gather+candidate_topk path "
+                        "(candidate_paths.parity)")
     mu = _load(art_dir, "BENCH_mutation.json")
     if mu and mu.get("parity_incremental_vs_rebuild") is not True:
         problems.append("BENCH_mutation.json: incremental insert does NOT "

@@ -36,7 +36,9 @@ class SearchResult(NamedTuple):
     count: jax.Array      # () int32 — points inside the final circle
     iters: jax.Array      # () int32
     converged: jax.Array  # () bool — Eq. 1 hit the acceptance band
-    truncated: jax.Array  # () bool — circle exceeded the candidate window
+    truncated: jax.Array  # () bool — candidates were dropped: the circle
+    # exceeded the candidate window, OR a window row held more than row_cap
+    # points (the gather keeps only the first row_cap of each row's span)
 
 
 class Candidates(NamedTuple):
@@ -220,7 +222,13 @@ def search_one(
     q_grid = proj_lib.to_grid_coords(index.proj, query, cfg.grid_size)
     stats = pyr.radius_search(index, cfg, q_grid, k)
     r = stats["radius"]
-    truncated = (2 * r + 1) > jnp.int32(cfg.window)
+    # the flag must fire whenever candidates were DROPPED: circle wider than
+    # the window, or a window row overflowing its row_cap slice (same rule,
+    # same span math, as the batched backends)
+    start, end = window_spans(index, cfg, q_grid)
+    truncated = ((2 * r + 1) > jnp.int32(cfg.window)) | jnp.any(
+        end - start > jnp.int32(cfg.row_cap)
+    )
 
     cand = gather_candidates(index, cfg, q_grid)
     if mode == "paper":

@@ -13,28 +13,39 @@ Pallas kernels so the hot path is MXU/VPU-shaped:
      (GridIndex.pyr_tiles), instead of counting every level and selecting
      from an (L, B, C) stack (the PR-1 L-fold overcount, kept as
      `batched_counts_stacked` for benchmarking);
-  2. the CSR window gather as ONE batched (B, w*row_cap) advanced-index
-     gather instead of B*w dynamic_slices;
-  3. re-ranking with the fused `kernels.ops.candidate_topk` distance+top-k
-     kernel (interpret-mode on CPU, Mosaic on TPU) instead of per-query
-     `lax.top_k`.
+  2. the candidate stage as a pluggable `CandidatePipeline`:
+       "fused"  (default) — `kernels.ops.csr_candidate_topk` DMAs candidate
+                 rows straight from the CSR-sorted store into a
+                 double-buffered VMEM scratch and emits (dists, GLOBAL CSR
+                 indices); nothing of size (B, w*row_cap) ever reaches HBM,
+                 and record assembly is one (B, k) take per field;
+       "gather" — the PR-1..4 path: one batched (B, w*row_cap) advanced-
+                  index gather of four record fields, then the dense
+                  `kernels.ops.candidate_topk` re-rank.  Registered as the
+                  `pallas_gather` backend — benchmark baseline and second
+                  oracle, exactly how `pallas_stacked` preserves the PR-1
+                  counting path.
 
-`search`/`classify` also take `chunk_size=`: serve-scale batches stream
-through fixed-size kernel invocations (one static shape, bounded VMEM)
-instead of materializing giant per-batch intermediates.
+Both pipelines are bit-for-bit identical to each other and to the jnp path
+(same candidate order, same clamped spans, same first-index tie breaks; see
+tests/test_batched_backend.py).  `search`/`classify` also take
+`chunk_size=`: serve-scale batches stream through fixed-size kernel
+invocations (one static shape, bounded VMEM) instead of materializing giant
+per-batch intermediates.
 
-Semantics are bit-for-bit identical to the jnp path (the kernels share their
-oracles' contracts; see tests/test_batched_backend.py).  This module is the
-implementation behind the `pallas` backend of the `repro.api` registry —
-hold an `ActiveSearcher` with `ExecutionPlan(backend="pallas")` instead of
-calling these entry points directly (the old `active_search.search(
-backend=...)` kwarg path survives only as a deprecation shim).
+This module implements the `pallas` / `pallas_gather` backends of the
+`repro.api` registry — hold an `ActiveSearcher` with
+`ExecutionPlan(backend="pallas")` instead of calling these entry points
+directly (the old `active_search.search(backend=...)` kwarg path survives
+only as a deprecation shim).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from functools import partial
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +61,7 @@ from repro.core.active_search import (
     run_chunked,
     window_spans,
 )
-from repro.core.grid import GridConfig, GridIndex, flatten_pyramid_tiles
+from repro.core.grid import GridConfig, GridIndex
 from repro.kernels import ops
 
 
@@ -80,8 +91,18 @@ def batched_counts(
 
     levels = pyr.level_for_radius(radii, cfg)  # (B,) int32
     tiles = index.pyr_tiles
-    if tiles is None:  # index predates the flattened layout — build it here
-        tiles = flatten_pyramid_tiles(index.pyramid, cfg.tile)
+    if tiles is None:
+        # Every index builder lays the tiles out exactly once (build_index,
+        # mutable.snapshot, ActiveSearcher.from_index); re-flattening the
+        # whole pyramid here would silently tax EVERY count call, so a
+        # pre-layout index is an error, not a fallback.
+        raise ValueError(
+            "GridIndex.pyr_tiles is missing (pre-layout index): the pallas "
+            "count path needs the pyramid pre-cut into T-tiles.  Wrap the "
+            "index once via repro.api.ActiveSearcher.from_index(index, cfg) "
+            "or set pyr_tiles=grid.flatten_pyramid_tiles(index.pyramid, "
+            "cfg.tile) instead of paying a per-call re-flatten."
+        )
     return ops.tile_count_multilevel(
         tiles, q_grid, radii.astype(jnp.float32), levels, cfg.tile,
         cfg.level_nblks, metric=cfg.metric, interpret=interpret,
@@ -185,22 +206,26 @@ def radius_search_batched(
 
 
 def gather_candidates_batched(
-    index: GridIndex, cfg: GridConfig, q_grid: jax.Array
+    index: GridIndex,
+    cfg: GridConfig,
+    q_grid: jax.Array,
+    spans: tuple[jax.Array, jax.Array] | None = None,
 ) -> Candidates:
     """CSR window gather for the whole batch as ONE advanced-index gather.
 
     Same span math as the per-query path (`active_search.window_spans` /
     `padded_csr`), but the (B, w, row_cap) index tensor is materialized up
     front so the candidate records come back in a single (B, w*row_cap)
-    gather per field.
+    gather per field.  This is the "gather" CandidatePipeline's stage — the
+    fused pipeline never materializes any of it.  `spans` lets a caller that
+    already computed the window spans pass them in.
     """
     w, rcap = cfg.window, cfg.row_cap
     b = q_grid.shape[0]
     pts, crd, lab, ids, n, n_pad = padded_csr(index, rcap)
-    start, end = window_spans(index, cfg, q_grid)                   # (B, w)
+    start, end = spans if spans is not None else window_spans(index, cfg, q_grid)
 
-    s_cl = jnp.clip(start, 0, max(n_pad - rcap, 0))                 # (B, w)
-    j = s_cl[:, :, None] + jnp.arange(rcap, dtype=jnp.int32)        # (B, w, rcap)
+    j = _window_flat_indices(n_pad, cfg, start)                     # (B, w, rcap)
     ok = (j >= start[:, :, None]) & (j < end[:, :, None]) & (j < n)
 
     flat = j.reshape(b, w * rcap)
@@ -213,57 +238,137 @@ def gather_candidates_batched(
     )
 
 
-# ------------------------------------------------------------------ topk -----
+def _window_flat_indices(n_pad: int, cfg: GridConfig, start: jax.Array):
+    """Global CSR row index of every window slot: (B, w, row_cap) int32.
 
-
-def _topk_batched(
-    cand: Candidates,
-    rank_points: jax.Array,   # (B, C, rd) — vectors the kernel ranks by
-    rank_queries: jax.Array,  # (B, rd)
-    k: int,
-    cfg: GridConfig,
-    stats: dict[str, jax.Array],
-    truncated: jax.Array,
-    interpret: bool | None,
-) -> SearchResult:
-    """Fused distance + top-k via `ops.candidate_topk`, then record assembly.
-
-    d_chunk is rounded up to the full feature dim so the kernel reduces each
-    candidate in one accumulation step — bit-identical to the jnp path's
-    single-sum distances (multi-chunk accumulation would reassociate the
-    float32 sum).  On TPU with very large d, cap d_chunk and accept the
-    reassociation.
+    THE definition of the slot -> CSR-row map (clamped span start + in-row
+    offset) shared by the gather pipeline's field gather and its
+    slot-to-global-index conversion — one clamp rule, never two copies.
     """
+    s_cl = jnp.clip(start, 0, max(n_pad - cfg.row_cap, 0))          # (B, w)
+    return s_cl[:, :, None] + jnp.arange(cfg.row_cap, dtype=jnp.int32)
+
+
+# -------------------------------------------------------- candidate stage ----
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidatePipeline:
+    """One pluggable candidate stage: spans in, ranked global rows out.
+
+    select(index, cfg, q_grid, queries, spans, k, mode, radius, interpret,
+           d_chunk) -> (dists (B, k) float32 with +inf pads,
+                        gidx  (B, k) int32 GLOBAL CSR rows with -1 pads)
+
+    Every pipeline must implement the SAME masking/tie-break contract as the
+    per-query jnp reference (clamped span starts, row-major candidate order,
+    first-index ties), so registered pipelines are interchangeable
+    bit-for-bit and the facade can treat the stage as a plan detail.
+    """
+
+    name: str
+    select: Callable[..., tuple[jax.Array, jax.Array]]
+    description: str = ""
+
+
+_CANDIDATE_PIPELINES: dict[str, CandidatePipeline] = {}
+
+
+def register_candidate_pipeline(pipeline: CandidatePipeline) -> None:
+    """Register (or replace) a candidate-stage pipeline under its name."""
+    _CANDIDATE_PIPELINES[pipeline.name] = pipeline
+
+
+def get_candidate_pipeline(name: str) -> CandidatePipeline:
+    try:
+        return _CANDIDATE_PIPELINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown candidate pipeline {name!r}; registered: "
+            f"{sorted(_CANDIDATE_PIPELINES)}"
+        ) from None
+
+
+def registered_candidate_pipelines() -> tuple[str, ...]:
+    return tuple(sorted(_CANDIDATE_PIPELINES))
+
+
+def _fused_select(index, cfg, q_grid, queries, spans, k, mode, radius,
+                  interpret, d_chunk):
+    """csr_candidate_topk: DMA candidate rows straight from the CSR store —
+    the only HBM traffic the stage produces is the (B, k) result pair."""
+    pts, crd, _lab, _ids, n, _n_pad = padded_csr(index, cfg.row_cap)
+    start, end = spans
+    if mode == "paper":
+        return ops.csr_candidate_topk(
+            crd, start, end, q_grid, k, n, cfg.row_cap, metric=cfg.metric,
+            radii=radius.astype(jnp.float32), center_cells=True,
+            d_chunk=d_chunk, interpret=interpret,
+        )
+    return ops.csr_candidate_topk(
+        pts, start, end, queries.astype(jnp.float32), k, n, cfg.row_cap,
+        metric=cfg.metric, d_chunk=d_chunk, interpret=interpret,
+    )
+
+
+def _gather_select(index, cfg, q_grid, queries, spans, k, mode, radius,
+                   interpret, d_chunk):
+    """gather_candidates_batched + dense candidate_topk (the PR-1..4 path),
+    with the selected slots mapped back to global CSR rows so both pipelines
+    share one record-assembly step."""
+    cand = gather_candidates_batched(index, cfg, q_grid, spans=spans)
+    if mode == "paper":
+        centers = jnp.floor(cand.coords) + 0.5                  # (B, C, 2)
+        gd = _metric_dist(centers, q_grid[:, None, :], cfg.metric)
+        in_circle = gd <= radius[:, None].astype(jnp.float32)
+        cand = cand._replace(valid=cand.valid & in_circle)
+        rank_points, rank_queries = centers, q_grid
+    else:
+        rank_points = cand.points
+        rank_queries = queries.astype(jnp.float32)
+
     rd = rank_points.shape[-1]
+    # d_chunk=None -> reduce each candidate in ONE accumulation step, which
+    # keeps the float32 sums bit-identical to the jnp path; an explicit cap
+    # (ExecutionPlan.d_chunk) trades that reassociation for bounded VMEM on
+    # TPU with very large d.
+    dc = rd if d_chunk is None else max(1, min(d_chunk, rd))
     outd, outi = ops.candidate_topk(
-        rank_points,
-        cand.valid,
-        rank_queries,
-        k,
-        metric=cfg.metric,
-        d_chunk=max(rd, 1),
-        interpret=interpret,
+        rank_points, cand.valid, rank_queries, k,
+        metric=cfg.metric, d_chunk=max(dc, 1), interpret=interpret,
     )
-    sel_valid = jnp.isfinite(outd)
-    idx = jnp.maximum(outi, 0)
-    take = lambda a: jnp.take_along_axis(a, idx, axis=1)
-    return SearchResult(
-        ids=jnp.where(sel_valid, take(cand.ids), -1),
-        dists=outd.astype(jnp.float32),
-        labels=jnp.where(sel_valid, take(cand.labels), -1),
-        valid=sel_valid,
-        radius=stats["radius"],
-        count=stats["count"],
-        iters=stats["iters"],
-        converged=stats["converged"],
-        truncated=truncated,
-    )
+    # slot index -> global CSR row (the SAME _window_flat_indices map the
+    # gather built its flat index from), so assembly downstream needs no
+    # (B, w*row_cap) fields
+    n_pad = padded_csr(index, cfg.row_cap)[5]
+    start, _ = spans
+    j = _window_flat_indices(n_pad, cfg, start)
+    flat = j.reshape(q_grid.shape[0], cfg.window * cfg.row_cap)
+    gidx = jnp.take_along_axis(flat, jnp.maximum(outi, 0), axis=1)
+    return outd, jnp.where(outi >= 0, gidx, -1)
+
+
+register_candidate_pipeline(CandidatePipeline(
+    name="fused",
+    select=_fused_select,
+    description="csr_candidate_topk: double-buffered DMA from the CSR "
+                "store, no (B, w*row_cap, d) HBM intermediate",
+))
+register_candidate_pipeline(CandidatePipeline(
+    name="gather",
+    select=_gather_select,
+    description="one-shot (B, w*row_cap) four-field gather + dense "
+                "candidate_topk (benchmark baseline / second oracle)",
+))
 
 
 # -------------------------------------------------------------- entry points -
 
 
-@partial(jax.jit, static_argnames=("cfg", "k", "mode", "interpret"))
+@partial(
+    jax.jit,
+    static_argnames=("cfg", "k", "mode", "interpret", "pipeline", "d_chunk"),
+)
 def _search_impl(
     index: GridIndex,
     cfg: GridConfig,
@@ -271,31 +376,41 @@ def _search_impl(
     k: int,
     mode: str = "refined",
     interpret: bool | None = None,
+    pipeline: CandidatePipeline | None = None,
+    d_chunk: int | None = None,
 ) -> SearchResult:
+    # `pipeline` is the RESOLVED CandidatePipeline (frozen, hashed by its
+    # fields, so re-registering a name retraces instead of silently serving
+    # the stale jit cache); the public wrappers resolve names eagerly.
+    if pipeline is None:
+        pipeline = get_candidate_pipeline("fused")
     q_grid = proj_lib.to_grid_coords(index.proj, queries, cfg.grid_size)  # (B, 2)
     stats = radius_search_batched(index, cfg, q_grid, k, interpret)
     r = stats["radius"]
-    truncated = (2 * r + 1) > jnp.int32(cfg.window)
+    start, end = window_spans(index, cfg, q_grid)                   # (B, w)
+    truncated = ((2 * r + 1) > jnp.int32(cfg.window)) | jnp.any(
+        end - start > jnp.int32(cfg.row_cap), axis=-1
+    )
 
-    cand = gather_candidates_batched(index, cfg, q_grid)
-    if mode == "paper":
-        centers = jnp.floor(cand.coords) + 0.5                  # (B, C, 2)
-        gd = _metric_dist(centers, q_grid[:, None, :], cfg.metric)
-        in_circle = gd <= r[:, None].astype(jnp.float32)
-        cand = cand._replace(valid=cand.valid & in_circle)
-        return _topk_batched(
-            cand, centers, q_grid, k, cfg, stats, truncated, interpret
-        )
+    outd, outi = pipeline.select(
+        index, cfg, q_grid, queries, (start, end), k, mode, r, interpret,
+        d_chunk,
+    )
 
-    return _topk_batched(
-        cand,
-        cand.points,
-        queries.astype(jnp.float32),
-        k,
-        cfg,
-        stats,
-        truncated,
-        interpret,
+    # record assembly: one (B, k) take per field from the padded CSR arrays
+    _pts, _crd, lab, ids, _n, _n_pad = padded_csr(index, cfg.row_cap)
+    sel_valid = jnp.isfinite(outd)
+    idx = jnp.maximum(outi, 0)
+    return SearchResult(
+        ids=jnp.where(sel_valid, jnp.take(ids, idx), -1),
+        dists=outd.astype(jnp.float32),
+        labels=jnp.where(sel_valid, jnp.take(lab, idx), -1),
+        valid=sel_valid,
+        radius=stats["radius"],
+        count=stats["count"],
+        iters=stats["iters"],
+        converged=stats["converged"],
+        truncated=truncated,
     )
 
 
@@ -307,23 +422,31 @@ def search(
     mode: str = "refined",
     interpret: bool | None = None,
     chunk_size: int | None = None,
+    pipeline: str = "fused",
+    d_chunk: int | None = None,
 ) -> SearchResult:
     """Batched kernel-backed active search: queries (B, d) -> SearchResult
     with leading B.  Same result contract as the facade's
     `ActiveSearcher.search` (repro.api), which is how callers should reach
-    this path (`ExecutionPlan(backend="pallas")`).
+    this path (`ExecutionPlan(backend="pallas")`, or "pallas_gather" for the
+    gather-pipeline baseline).
 
     chunk_size streams the batch through fixed-size kernel invocations (one
     static shape, bounded VMEM) — results are bit-identical for any value.
     """
+    pipe = get_candidate_pipeline(pipeline)  # eager: bad names raise here
     return run_chunked(
-        lambda q: _search_impl(index, cfg, q, k, mode, interpret),
+        lambda q: _search_impl(index, cfg, q, k, mode, interpret, pipe,
+                               d_chunk),
         queries,
         chunk_size,
     )
 
 
-@partial(jax.jit, static_argnames=("cfg", "k", "mode", "interpret"))
+@partial(
+    jax.jit,
+    static_argnames=("cfg", "k", "mode", "interpret", "pipeline", "d_chunk"),
+)
 def _classify_impl(
     index: GridIndex,
     cfg: GridConfig,
@@ -331,6 +454,8 @@ def _classify_impl(
     k: int,
     mode: str = "refined",
     interpret: bool | None = None,
+    pipeline: CandidatePipeline | None = None,
+    d_chunk: int | None = None,
 ) -> jax.Array:
     if cfg.n_classes <= 0:
         raise ValueError("classify() needs an index built with n_classes > 0")
@@ -342,7 +467,8 @@ def _classify_impl(
         counts = batched_counts(index, cfg, q_grid, stats["radius"], interpret)
         return jnp.argmax(counts, axis=-1).astype(jnp.int32)
 
-    res = _search_impl(index, cfg, queries, k, mode="refined", interpret=interpret)
+    res = _search_impl(index, cfg, queries, k, mode="refined",
+                       interpret=interpret, pipeline=pipeline, d_chunk=d_chunk)
     refined = majority_vote(res.labels, res.valid, cfg.n_classes)
 
     # same graceful degradation as the jnp path, but counted by the kernel
@@ -361,12 +487,16 @@ def classify(
     mode: str = "refined",
     interpret: bool | None = None,
     chunk_size: int | None = None,
+    pipeline: str = "fused",
+    d_chunk: int | None = None,
 ) -> jax.Array:
     """Batched kNN classification — same result contract as the facade's
     `ActiveSearcher.classify` (repro.api), with every count pass going
     through the level-scheduled tile_count_multilevel kernel."""
+    pipe = get_candidate_pipeline(pipeline)  # eager: bad names raise here
     return run_chunked(
-        lambda q: _classify_impl(index, cfg, q, k, mode, interpret),
+        lambda q: _classify_impl(index, cfg, q, k, mode, interpret, pipe,
+                                 d_chunk),
         queries,
         chunk_size,
     )

@@ -45,7 +45,12 @@ from repro.core import exact as exact_lib
 from repro.core import projection as proj_lib
 from repro.core import pyramid as pyr
 from repro.core.active_search import SearchResult, _search_jnp, run_chunked
-from repro.core.grid import GridConfig, GridIndex, build_index
+from repro.core.grid import (
+    GridConfig,
+    GridIndex,
+    build_index,
+    flatten_pyramid_tiles,
+)
 
 _MODES = ("refined", "paper")
 
@@ -57,13 +62,20 @@ _MODES = ("refined", "paper")
 class ExecutionPlan:
     """HOW a search executes — frozen, hashable, safe as a jit static arg.
 
-    backend:    registered backend name ("jnp" | "pallas" | "exact" |
-                "sharded" | anything added via `register_backend`).
+    backend:    registered backend name ("jnp" | "pallas" | "pallas_gather"
+                | "exact" | "sharded" | anything added via
+                `register_backend`).
     interpret:  force/disable Pallas interpret mode (Pallas-backed backends
                 only; None = REPRO_PALLAS_INTERPRET).
     chunk_size: stream query batches through fixed-size chunks so every
                 kernel invocation keeps ONE static shape / VMEM footprint.
                 Bit-identical for any value.
+    d_chunk:    cap the per-step feature-dim accumulation of the candidate
+                re-rank kernels (Pallas candidate-ranking backends only;
+                None = reduce each candidate in ONE step, bit-identical to
+                the jnp path).  Setting a cap bounds kernel VMEM for very
+                large d at the cost of reassociating the float32 distance
+                sums.
     device:     optional placement target (jax.Device or Sharding); queries
                 are `jax.device_put` there before dispatch.
     donate:     donate the caller's query buffer on placement (serve-scale
@@ -73,6 +85,7 @@ class ExecutionPlan:
     backend: str = "jnp"
     interpret: bool | None = None
     chunk_size: int | None = None
+    d_chunk: int | None = None
     device: Any = None
     donate: bool = False
 
@@ -80,6 +93,10 @@ class ExecutionPlan:
         if self.chunk_size is not None and self.chunk_size <= 0:
             raise ValueError(
                 f"chunk_size must be positive, got {self.chunk_size}"
+            )
+        if self.d_chunk is not None and self.d_chunk <= 0:
+            raise ValueError(
+                f"d_chunk must be positive, got {self.d_chunk}"
             )
         if self.donate and self.device is None:
             raise ValueError("donate=True needs an ExecutionPlan.device")
@@ -100,16 +117,18 @@ class BackendImpl:
 
     Any of the three may be None (e.g. `pallas_stacked` is a count-only
     benchmark baseline); the facade raises eagerly when an op is missing.
-    `supports_interpret` gates `plan.interpret`.  `requires_mesh` marks
-    backends that only work on a `build_sharded` handle (mesh + axis), so
-    eager validators (e.g. serve's CLI check) can reject them up front
-    without name-matching.
+    `supports_interpret` gates `plan.interpret`; `supports_d_chunk` gates
+    `plan.d_chunk` (only backends that run a Pallas candidate re-rank can
+    honor the accumulation cap).  `requires_mesh` marks backends that only
+    work on a `build_sharded` handle (mesh + axis), so eager validators
+    (e.g. serve's CLI check) can reject them up front without name-matching.
     """
 
     search: Callable[..., SearchResult] | None = None
     classify: Callable[..., jax.Array] | None = None
     count_at: Callable[..., jax.Array] | None = None
     supports_interpret: bool = False
+    supports_d_chunk: bool = False
     requires_mesh: bool = False
     description: str = ""
 
@@ -190,7 +209,16 @@ class ActiveSearcher:
         cfg: GridConfig,
         plan: ExecutionPlan | None = None,
     ) -> "ActiveSearcher":
-        """Wrap an already-built GridIndex (e.g. a kNN-LM datastore)."""
+        """Wrap an already-built GridIndex (e.g. a kNN-LM datastore).
+
+        Pre-layout indexes (pyr_tiles=None, e.g. restored from an old
+        checkpoint or assembled by hand) are upgraded HERE, exactly once:
+        the pallas count path refuses to re-flatten the pyramid per call.
+        """
+        if cfg.counter == "pyramid" and index.pyr_tiles is None:
+            index = index._replace(
+                pyr_tiles=flatten_pyramid_tiles(index.pyramid, cfg.tile)
+            )
         return cls(index=index, cfg=cfg, plan=plan or ExecutionPlan())
 
     @classmethod
@@ -221,16 +249,20 @@ class ActiveSearcher:
     ) -> "ActiveSearcher":
         """Same index, new execution plan (full plan or field overrides).
 
-        Switching `backend=` drops the backend-specific `interpret` knob
-        when the new backend does not support it (unless explicitly
-        overridden too), so `pallas_plan_handle.with_plan(backend="exact")`
-        works instead of tripping the interpret validation."""
+        Switching `backend=` drops the backend-specific `interpret` and
+        `d_chunk` knobs when the new backend does not support them (unless
+        explicitly overridden too), so
+        `pallas_plan_handle.with_plan(backend="exact")` works instead of
+        tripping the capability validation."""
         if plan is not None and overrides:
             raise ValueError("pass a full ExecutionPlan OR field overrides")
-        if plan is None and "backend" in overrides and "interpret" not in overrides:
+        if plan is None and "backend" in overrides:
             impl = _REGISTRY.get(overrides["backend"])
-            if impl is not None and not impl.supports_interpret:
-                overrides = {**overrides, "interpret": None}
+            if impl is not None:
+                if not impl.supports_interpret and "interpret" not in overrides:
+                    overrides = {**overrides, "interpret": None}
+                if not impl.supports_d_chunk and "d_chunk" not in overrides:
+                    overrides = {**overrides, "d_chunk": None}
         new = plan if plan is not None else dataclasses.replace(self.plan, **overrides)
         return dataclasses.replace(self, plan=new)
 
@@ -302,6 +334,12 @@ class ActiveSearcher:
             raise ValueError(
                 f"interpret= only applies to Pallas-backed backends; "
                 f"backend {self.plan.backend!r} does not support it"
+            )
+        if self.plan.d_chunk is not None and not impl.supports_d_chunk:
+            raise ValueError(
+                f"d_chunk= only applies to Pallas candidate-ranking "
+                f"backends; backend {self.plan.backend!r} does not "
+                f"support it"
             )
         fn = getattr(impl, op)
         if fn is None:
@@ -424,20 +462,30 @@ def _count_jnp(index: GridIndex, cfg: GridConfig, q_grid, radii):
     )
 
 
-def _pallas_search(s: ActiveSearcher, queries, k, mode):
+def _pallas_search(s: ActiveSearcher, queries, k, mode, pipeline="fused"):
     from repro.core import batched
 
     return batched.search(
-        s.index, s.cfg, queries, k, mode=mode, interpret=s.plan.interpret
+        s.index, s.cfg, queries, k, mode=mode, interpret=s.plan.interpret,
+        pipeline=pipeline, d_chunk=s.plan.d_chunk,
     )
 
 
-def _pallas_classify(s: ActiveSearcher, queries, k, mode):
+def _pallas_classify(s: ActiveSearcher, queries, k, mode, pipeline="fused"):
     from repro.core import batched
 
     return batched.classify(
-        s.index, s.cfg, queries, k, mode=mode, interpret=s.plan.interpret
+        s.index, s.cfg, queries, k, mode=mode, interpret=s.plan.interpret,
+        pipeline=pipeline, d_chunk=s.plan.d_chunk,
     )
+
+
+def _pallas_gather_search(s: ActiveSearcher, queries, k, mode):
+    return _pallas_search(s, queries, k, mode, pipeline="gather")
+
+
+def _pallas_gather_classify(s: ActiveSearcher, queries, k, mode):
+    return _pallas_classify(s, queries, k, mode, pipeline="gather")
 
 
 def _pallas_count_at(s: ActiveSearcher, q_grid, radii):
@@ -548,9 +596,19 @@ register_backend("jnp", BackendImpl(
 register_backend("pallas", BackendImpl(
     search=_pallas_search, classify=_pallas_classify,
     count_at=_pallas_count_at, supports_interpret=True,
+    supports_d_chunk=True,
     description="batched kernel pipeline: level-scheduled "
-                "tile_count_multilevel + one-shot CSR gather + fused "
-                "candidate_topk (core/batched.py)",
+                "tile_count_multilevel + FUSED csr_candidate_topk (candidate "
+                "rows DMA'd straight from the CSR store; no (B, w*row_cap) "
+                "intermediate) (core/batched.py)",
+))
+register_backend("pallas_gather", BackendImpl(
+    search=_pallas_gather_search, classify=_pallas_gather_classify,
+    count_at=_pallas_count_at, supports_interpret=True,
+    supports_d_chunk=True,
+    description="benchmark baseline / second oracle: same counting, but the "
+                "candidate stage is the PR-1..4 one-shot (B, w*row_cap) "
+                "four-field gather + dense candidate_topk",
 ))
 register_backend("pallas_stacked", BackendImpl(
     count_at=_pallas_stacked_count_at, supports_interpret=True,

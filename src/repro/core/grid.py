@@ -197,7 +197,8 @@ def build_index(
         pyramid=pyramid,
         sat=integral_lib.build_sat(base) if cfg.counter == "sat" else None,
         # only the pyramid counter's pallas path reads the flat tiling;
-        # batched_counts falls back to building it on the fly when None
+        # batched_counts treats None as a hard error (pre-layout indexes are
+        # upgraded once by ActiveSearcher.from_index, never per call)
         pyr_tiles=(
             flatten_pyramid_tiles(pyramid, cfg.tile)
             if cfg.counter == "pyramid" else None

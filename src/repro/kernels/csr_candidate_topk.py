@@ -1,0 +1,229 @@
+"""Pallas TPU kernel: fused CSR-gather -> distance -> streaming top-k.
+
+`candidate_topk` ranks candidates that a separate gather stage already
+materialized as a dense (B, w*row_cap, d) tensor in HBM — four full-field
+`jnp.take`s (points/coords/labels/ids) whose rows are mostly padding
+(`valid` masks the slack).  This kernel retires that intermediate: each
+query-program reads its window spans from scalar-prefetched SMEM and DMAs
+candidate rows DIRECTLY from the CSR-sorted store (which never leaves HBM)
+into a double-buffered VMEM scratch, so the only thing the candidate stage
+ever writes back is the (B, k) result.
+
+Per grid program (one query):
+
+  1. warm-up DMA of window row 0 (`row_cap` store rows starting at the
+     clamped span start) into buffer slot 0;
+  2. for each of the `w` window rows: kick off the NEXT row's DMA into the
+     other slot, wait on the current slot, compute the metric distance of
+     its `row_cap` rows against the query on the VPU, and write
+     (masked distance, global CSR row index) into a (1, w*row_cap) VMEM
+     accumulator pair — invalid lanes (outside [start, end), past the live
+     CSR length, or outside the paper-mode circle) get +inf;
+  3. run the streaming (min, argmin, mask) top-k over the accumulator —
+     k is small (<=64) so the unrolled select beats a sort — emitting
+     distances and GLOBAL CSR indices, so record assembly downstream is one
+     (B, k) take per field instead of four (B, w*row_cap) gathers.
+
+Masking/tie-break contract is IDENTICAL to gather_candidates_batched +
+candidate_topk lane for lane (same candidate order, same clamped span
+starts, first-index argmin ties), so the fused path is bit-for-bit with the
+gather path and with the per-query jnp reference.  `center_cells=True` +
+`radii` reproduce mode="paper" (rank floor(coords)+0.5 cell centers,
+mask to the final Eq.-1 circle).  Validated with interpret=True against
+ref.csr_candidate_topk.
+
+VMEM per program: 2 * row_cap * d floats of row buffer + 2 * w * row_cap
+accumulator lanes — independent of B and of N, which is what lets
+serve-scale batches stream through fixed-size invocations while the store
+scales to millions of points.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    span_ref,   # scalar prefetch: (B, 2w) int32 — [starts | ends] CSR spans
+    rad_ref,    # scalar prefetch: (B,) float32 — Eq.-1 radii (paper mode)
+    q_ref,      # (1, d) float32 — this query's ranking vector
+    store_ref,  # (n_pad, d) float32 — CSR-sorted store, stays in HBM/ANY
+    outd_ref,   # (1, k) float32
+    outi_ref,   # (1, k) int32 — global CSR row indices (-1 where invalid)
+    buf_ref,    # scratch (2, row_cap, d) float32 — double-buffered rows
+    dist_ref,   # scratch (1, w*row_cap) float32
+    gidx_ref,   # scratch (1, w*row_cap) int32
+    sem,        # DMA semaphores (2,)
+    *,
+    w: int,
+    row_cap: int,
+    k: int,
+    n: int,
+    n_pad: int,
+    d_chunks: tuple[tuple[int, int], ...],
+    metric: str,
+    center_cells: bool,
+    use_radius: bool,
+):
+    i = pl.program_id(0)
+    q = q_ref[...]                            # (1, d)
+    r = rad_ref[i]
+    s_max = max(n_pad - row_cap, 0)
+
+    def s_cl(row):
+        # same clamp as the gather path: a span start near the end of the
+        # store still yields an in-bounds row_cap slice
+        return jnp.clip(span_ref[i, row], 0, s_max)
+
+    def row_dma(slot, row):
+        return pltpu.make_async_copy(
+            store_ref.at[pl.ds(s_cl(row), row_cap)],
+            buf_ref.at[slot],
+            sem.at[slot],
+        )
+
+    row_dma(0, 0).start()
+
+    def body(row, carry):
+        slot = jax.lax.rem(row, 2)
+
+        @pl.when(row + 1 < w)
+        def _prefetch_next():
+            row_dma(jax.lax.rem(row + 1, 2), row + 1).start()
+
+        row_dma(slot, row).wait()
+        rows = buf_ref[slot]                  # (row_cap, d)
+        if center_cells:                      # paper mode ranks cell centers
+            rows = jnp.floor(rows) + 0.5
+        diff = rows - q                       # broadcast over row_cap
+        if metric == "l1":
+            acc = sum(
+                jnp.sum(jnp.abs(diff[:, c0:c0 + dc]), axis=1)
+                for c0, dc in d_chunks
+            )
+            dist = acc
+        else:
+            acc = sum(
+                jnp.sum(diff[:, c0:c0 + dc] * diff[:, c0:c0 + dc], axis=1)
+                for c0, dc in d_chunks
+            )
+            dist = jnp.sqrt(jnp.maximum(acc, 0.0))
+        j = s_cl(row) + jax.lax.broadcasted_iota(jnp.int32, (row_cap,), 0)
+        ok = (j >= span_ref[i, row]) & (j < span_ref[i, w + row]) & (j < n)
+        if use_radius:
+            ok = ok & (dist <= r)
+        dist_ref[0, pl.ds(row * row_cap, row_cap)] = jnp.where(
+            ok, dist, jnp.inf
+        )
+        gidx_ref[0, pl.ds(row * row_cap, row_cap)] = j
+        return carry
+
+    jax.lax.fori_loop(0, w, body, 0)
+
+    dcur = dist_ref[...]                      # (1, w*row_cap)
+    col = jax.lax.broadcasted_iota(jnp.int32, dcur.shape, 1)
+    dists, idxs = [], []
+    for _ in range(k):
+        m = jnp.min(dcur, axis=1)             # (1,)
+        am = jnp.argmin(dcur, axis=1)         # (1,) first-index ties
+        dists.append(m[0])
+        g = gidx_ref[0, am[0]]
+        idxs.append(jnp.where(jnp.isfinite(m[0]), g, -1))
+        dcur = jnp.where(col == am[:, None], jnp.inf, dcur)
+    outd_ref[0, :] = jnp.stack(dists)
+    outi_ref[0, :] = jnp.stack(idxs)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "k", "n", "row_cap", "metric", "center_cells", "d_chunk", "interpret"
+    ),
+)
+def csr_candidate_topk(
+    store: jax.Array,    # (n_pad, d) float32 — CSR-sorted ranking vectors
+    starts: jax.Array,   # (B, w) int32 — window-row span starts
+    ends: jax.Array,     # (B, w) int32 — window-row span ends
+    queries: jax.Array,  # (B, d) float32 — per-query ranking vectors
+    k: int,
+    n: int,              # live CSR rows (store rows >= n are padding)
+    row_cap: int,
+    metric: str = "l2",
+    radii: jax.Array | None = None,  # (B,) float32 — paper-mode circle mask
+    center_cells: bool = False,      # rank floor(store)+0.5 cell centers
+    d_chunk: int | None = None,      # split the d-accumulation (None = one sum)
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Contract identical to ref.csr_candidate_topk.
+
+    Returns (dists (B, k) float32 with +inf pads, idx (B, k) int32 GLOBAL
+    CSR row indices with -1 pads).  `n_pad = store.shape[0]` must be
+    >= row_cap (pad the store first — see active_search.padded_csr).
+    """
+    n_pad, d = store.shape
+    b, w = starts.shape
+    if n_pad < row_cap:
+        raise ValueError(
+            f"store has {n_pad} rows but row_cap={row_cap}; pad the store "
+            f"(active_search.padded_csr) so every span slice is in bounds"
+        )
+    if ends.shape != (b, w):
+        raise ValueError(f"ends shape {ends.shape} != starts {starts.shape}")
+    if queries.shape != (b, d):
+        # the grid is sized from the spans; a short queries array would have
+        # its block index clamped and silently rank trailing spans against a
+        # repeated query instead of failing
+        raise ValueError(
+            f"queries shape {queries.shape} does not match spans batch "
+            f"{b} x store dim {d}"
+        )
+    if radii is not None and radii.shape != (b,):
+        raise ValueError(
+            f"radii shape {radii.shape} does not match spans batch ({b},)"
+        )
+    dc = d if d_chunk is None else max(1, min(d_chunk, d))
+    d_chunks = tuple((c0, min(dc, d - c0)) for c0 in range(0, d, dc))
+
+    spans = jnp.concatenate([starts, ends], axis=1).astype(jnp.int32)
+    rad = (
+        jnp.zeros((b,), jnp.float32) if radii is None
+        else radii.astype(jnp.float32)
+    )
+    kernel = functools.partial(
+        _kernel,
+        w=w, row_cap=row_cap, k=k, n=n, n_pad=n_pad, d_chunks=d_chunks,
+        metric=metric, center_cells=center_cells,
+        use_radius=radii is not None,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, *_: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # store: manual DMA only
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, *_: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, *_: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, row_cap, d), jnp.float32),
+            pltpu.VMEM((1, w * row_cap), jnp.float32),
+            pltpu.VMEM((1, w * row_cap), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(spans, rad, queries.astype(jnp.float32), store.astype(jnp.float32))

@@ -14,6 +14,9 @@ import jax
 from repro.kernels.brute_knn import brute_knn as _brute_knn
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.candidate_topk import candidate_topk as _candidate_topk
+from repro.kernels.csr_candidate_topk import (
+    csr_candidate_topk as _csr_candidate_topk,
+)
 from repro.kernels.tile_count import tile_count as _tile_count
 from repro.kernels.tile_count_multilevel import (
     tile_count_multilevel as _tile_count_multilevel,
@@ -45,6 +48,18 @@ def candidate_topk(candidates, valid, queries, k, metric="l2", d_chunk=512, inte
     interpret = _default_interpret() if interpret is None else interpret
     return _candidate_topk(
         candidates, valid, queries, k, metric=metric, d_chunk=d_chunk, interpret=interpret
+    )
+
+
+def csr_candidate_topk(
+    store, starts, ends, queries, k, n, row_cap, metric="l2", radii=None,
+    center_cells=False, d_chunk=None, interpret=None,
+):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _csr_candidate_topk(
+        store, starts, ends, queries, k, n, row_cap, metric=metric,
+        radii=radii, center_cells=center_cells, d_chunk=d_chunk,
+        interpret=interpret,
     )
 
 

@@ -83,6 +83,51 @@ def candidate_topk(
     return dists, jnp.where(jnp.isfinite(dists), idx.astype(jnp.int32), -1)
 
 
+def csr_candidate_topk(
+    store: jax.Array,    # (n_pad, d) float32 — CSR-sorted ranking vectors
+    starts: jax.Array,   # (B, w) int32 window-row span starts
+    ends: jax.Array,     # (B, w) int32 window-row span ends
+    queries: jax.Array,  # (B, d) float32
+    k: int,
+    n: int,              # live CSR rows
+    row_cap: int,
+    metric: str = "l2",
+    radii: jax.Array | None = None,  # (B,) float32 paper-mode circle mask
+    center_cells: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused-gather oracle: materialize the (B, w*row_cap) window the way
+    gather_candidates_batched does, rank with candidate_topk's contract, and
+    map the selected slots back to GLOBAL CSR row indices.
+    Returns dists (B, k) float32 (inf pads) and idx (B, k) int32 (-1 pads)."""
+    n_pad = store.shape[0]
+    b, w = starts.shape
+    s_cl = jnp.clip(starts, 0, max(n_pad - row_cap, 0))          # (B, w)
+    j = s_cl[:, :, None] + jnp.arange(row_cap, dtype=jnp.int32)  # (B, w, cap)
+    ok = (j >= starts[:, :, None]) & (j < ends[:, :, None]) & (j < n)
+    flat = j.reshape(b, w * row_cap)
+    cand = jnp.take(store, flat, axis=0)                 # (B, w*cap, d)
+    if center_cells:
+        cand = jnp.floor(cand) + 0.5
+    diff = cand - queries[:, None, :].astype(jnp.float32)
+    if metric == "l1":
+        d = jnp.sum(jnp.abs(diff), axis=-1)
+    else:
+        d = jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+    valid = ok.reshape(b, w * row_cap)
+    if radii is not None:
+        valid = valid & (d <= radii[:, None].astype(jnp.float32))
+    d = jnp.where(valid, d, jnp.inf)
+    k_eff = min(k, d.shape[1])
+    neg, idx = lax.top_k(-d, k_eff)
+    if k_eff < k:  # k exceeds the window: pad like the kernel does
+        pad = k - k_eff
+        neg = jnp.concatenate([neg, jnp.full((b, pad), -jnp.inf)], axis=1)
+        idx = jnp.concatenate([idx, jnp.zeros((b, pad), idx.dtype)], axis=1)
+    dists = -neg
+    gidx = jnp.take_along_axis(flat, idx, axis=1)
+    return dists, jnp.where(jnp.isfinite(dists), gidx, -1)
+
+
 def brute_knn(
     queries: jax.Array,  # (B, d) float32
     points: jax.Array,   # (N, d) float32

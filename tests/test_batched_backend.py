@@ -32,14 +32,18 @@ def _assert_results_equal(a: act.SearchResult, b: act.SearchResult):
 
 def test_refined_parity_quick(rng):
     """Fast-tier parity: one index per metric, k swept inside the test so the
-    interpret-mode pipeline compiles a minimal number of variants."""
+    interpret-mode pipeline compiles a minimal number of variants.  BOTH
+    candidate pipelines — the fused csr_candidate_topk default ("pallas")
+    and the gather+candidate_topk baseline ("pallas_gather") — must be
+    bit-identical to the jnp reference."""
     for metric in ("l2", "l1"):
         _, _, cfg, idx = _index(rng, metric=metric)
         q = jnp.asarray(rng.normal(size=(8, 2)), jnp.float32)
         for k in (1, 8):
             ref = act.search(idx, cfg, q, k, backend="jnp")
-            got = act.search(idx, cfg, q, k, backend="pallas")
-            _assert_results_equal(ref, got)
+            for backend in ("pallas", "pallas_gather"):
+                got = act.search(idx, cfg, q, k, backend=backend)
+                _assert_results_equal(ref, got)
 
 
 @pytest.mark.slow
@@ -54,17 +58,22 @@ def test_refined_parity_bitforbit(rng, k, metric, b):
     _, _, cfg, idx = _index(rng, metric=metric)
     q = jnp.asarray(rng.normal(size=(b, 2)), jnp.float32)
     ref = act.search(idx, cfg, q, k, backend="jnp")
-    got = act.search(idx, cfg, q, k, backend="pallas")
-    _assert_results_equal(ref, got)
+    for backend in ("pallas", "pallas_gather"):
+        got = act.search(idx, cfg, q, k, backend=backend)
+        _assert_results_equal(ref, got)
 
 
 @pytest.mark.parametrize("k", [1, 11])
 def test_paper_mode_parity(rng, k):
+    """Paper mode ranks cell centers inside the final circle: the fused
+    kernel's center_cells+radii path and the gather pipeline's explicit
+    in-circle mask must both reproduce the jnp reference bit-for-bit."""
     _, _, cfg, idx = _index(rng)
     q = jnp.asarray(rng.normal(size=(16, 2)), jnp.float32)
     ref = act.search(idx, cfg, q, k, mode="paper", backend="jnp")
-    got = act.search(idx, cfg, q, k, mode="paper", backend="pallas")
-    _assert_results_equal(ref, got)
+    for backend in ("pallas", "pallas_gather"):
+        got = act.search(idx, cfg, q, k, mode="paper", backend=backend)
+        _assert_results_equal(ref, got)
 
 
 @pytest.mark.parametrize("mode", ["refined", "paper"])
@@ -84,8 +93,9 @@ def test_parity_k_exceeds_candidate_window(rng):
     idx = build_index(pts, cfg, identity_projection(pts))
     q = jnp.asarray(rng.normal(size=(4, 2)), jnp.float32)
     ref = act.search(idx, cfg, q, 100, backend="jnp")
-    got = act.search(idx, cfg, q, 100, backend="pallas")
-    _assert_results_equal(ref, got)
+    for backend in ("pallas", "pallas_gather"):
+        got = act.search(idx, cfg, q, 100, backend=backend)
+        _assert_results_equal(ref, got)
     assert not bool(np.asarray(ref.valid).all())  # some slots really padded
 
 
@@ -96,9 +106,10 @@ def test_parity_truncated_flag(rng):
     idx = build_index(pts, cfg, identity_projection(pts))
     q = jnp.zeros((2, 2), jnp.float32)
     ref = act.search(idx, cfg, q, 200, backend="jnp")
-    got = act.search(idx, cfg, q, 200, backend="pallas")
-    _assert_results_equal(ref, got)
-    assert bool(np.asarray(got.truncated).all())
+    for backend in ("pallas", "pallas_gather"):
+        got = act.search(idx, cfg, q, 200, backend=backend)
+        _assert_results_equal(ref, got)
+        assert bool(np.asarray(got.truncated).all())
 
 
 def test_parity_sat_counter(rng):
@@ -157,8 +168,9 @@ def test_parity_grid_corner_queries(rng):
         jnp.float32,
     )
     ref_res = act.search(idx, cfg, q, 8, backend="jnp")
-    got = act.search(idx, cfg, q, 8, backend="pallas")
-    _assert_results_equal(ref_res, got)
+    for backend in ("pallas", "pallas_gather"):
+        got = act.search(idx, cfg, q, 8, backend=backend)
+        _assert_results_equal(ref_res, got)
 
 
 def test_parity_max_radius_counts(rng):
@@ -185,7 +197,7 @@ def test_chunked_parity(rng):
     for any chunking, on both backends (incl. a non-dividing chunk size)."""
     _, _, cfg, idx = _index(rng, n=800)
     q = jnp.asarray(rng.normal(size=(10, 2)), jnp.float32)
-    for backend in ("jnp", "pallas"):
+    for backend in ("jnp", "pallas", "pallas_gather"):
         full = act.search(idx, cfg, q, 5, backend=backend)
         chunked = act.search(idx, cfg, q, 5, backend=backend, chunk_size=4)
         _assert_results_equal(full, chunked)
@@ -225,6 +237,97 @@ def test_gather_matches_per_query(rng):
             np.asarray(getattr(got, field)), np.asarray(getattr(want, field)),
             err_msg=field,
         )
+
+
+def test_truncated_row_overflow_parity(rng):
+    """truncated must ALSO fire when a window row holds more than row_cap
+    points (candidates silently dropped by the row_cap slice) even though
+    the circle fits the window — same flag from the jnp path and both
+    candidate pipelines."""
+    # everything in a handful of cells -> one window row overflows a tiny
+    # row_cap while Eq. 1 converges at a small radius
+    pts = jnp.asarray(rng.normal(size=(300, 2)) * 0.01, jnp.float32)
+    cfg = GridConfig(grid_size=64, tile=8, window=16, row_cap=4, r0=2,
+                     k_slack=4.0)
+    idx = build_index(pts, cfg, identity_projection(pts))
+    q = jnp.zeros((3, 2), jnp.float32)
+    ref = act.search(idx, cfg, q, 3, backend="jnp")
+    assert bool(np.asarray(ref.truncated).all())
+    # the overflow is the ONLY trigger here: the circle itself fits
+    assert bool((2 * np.asarray(ref.radius) + 1 <= cfg.window).all())
+    for backend in ("pallas", "pallas_gather"):
+        got = act.search(idx, cfg, q, 3, backend=backend)
+        _assert_results_equal(ref, got)
+
+
+def test_classify_parity_gather_pipeline(rng):
+    """classify threads the pipeline choice through _search_impl and the
+    count fallback identically on both pallas variants."""
+    _, _, cfg, idx = _index(rng, n=2000)
+    q = jnp.asarray(rng.normal(size=(24, 2)), jnp.float32)
+    ref = act.classify(idx, cfg, q, 9, backend="jnp")
+    for backend in ("pallas", "pallas_gather"):
+        got = act.classify(idx, cfg, q, 9, backend=backend)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_d_chunk_threading(rng):
+    """ExecutionPlan.d_chunk reaches both candidate kernels: results stay
+    correct (allclose dists, same neighbor ids as the default single-sum
+    plan) for caps smaller than d, and a cap >= d is bit-identical."""
+    from repro import api
+
+    pts = jnp.asarray(rng.normal(size=(900, 8)), jnp.float32)
+    cfg = GridConfig(grid_size=64, tile=8, window=16, row_cap=16, r0=4,
+                     k_slack=2.0)
+    s = api.ActiveSearcher.build(pts, cfg=cfg)
+    q = jnp.asarray(rng.normal(size=(6, 8)), jnp.float32)
+    for backend in ("pallas", "pallas_gather"):
+        base = s.with_plan(backend=backend).search(q, 5)
+        for dc in (3, 8, 512):
+            got = s.with_plan(backend=backend, d_chunk=dc).search(q, 5)
+            np.testing.assert_array_equal(
+                np.asarray(base.ids), np.asarray(got.ids),
+                err_msg=f"{backend} d_chunk={dc}",
+            )
+            np.testing.assert_allclose(
+                np.asarray(base.dists), np.asarray(got.dists),
+                rtol=1e-5, atol=1e-6, err_msg=f"{backend} d_chunk={dc}",
+            )
+            if dc >= 8:
+                _assert_results_equal(base, got)
+
+
+def test_unknown_candidate_pipeline_raises(rng):
+    _, _, cfg, idx = _index(rng, n=100)
+    q = jnp.zeros((1, 2), jnp.float32)
+    with pytest.raises(ValueError, match="candidate pipeline"):
+        batched.search(idx, cfg, q, 3, pipeline="telepathy")
+
+
+def test_candidate_pipeline_replacement_takes_effect(rng):
+    """register_candidate_pipeline's 'or replace' contract must survive the
+    jit cache: names are resolved EAGERLY to the (hashable) pipeline object,
+    so re-registering retraces instead of serving the stale select."""
+    _, _, cfg, idx = _index(rng, n=200)
+    q = jnp.asarray(rng.normal(size=(2, 2)), jnp.float32)
+    base = batched.search(idx, cfg, q, 3, pipeline="fused")  # warm the cache
+    orig = batched.get_candidate_pipeline("fused")
+    calls = []
+
+    def spy_select(*args, **kw):
+        calls.append(1)
+        return orig.select(*args, **kw)
+
+    try:
+        batched.register_candidate_pipeline(
+            batched.CandidatePipeline(name="fused", select=spy_select)
+        )
+        got = batched.search(idx, cfg, q, 3, pipeline="fused")
+        assert calls, "replaced pipeline never ran (stale jit cache)"
+        _assert_results_equal(base, got)
+    finally:
+        batched.register_candidate_pipeline(orig)
 
 
 def test_unknown_backend_raises(rng):

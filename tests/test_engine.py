@@ -313,3 +313,74 @@ def test_with_plan_backend_switch_drops_interpret(rng):
     assert p.with_plan(backend="pallas_stacked").plan.interpret is True
     with pytest.raises(ValueError, match="interpret"):
         p.with_plan(backend="exact", interpret=True).search(q, 3)
+
+
+def test_d_chunk_plan_validation(rng):
+    """d_chunk is eager and uniform like interpret: positive-only at plan
+    construction, Pallas candidate-ranking backends only at dispatch, and
+    with_plan backend switches drop the now-illegal knob."""
+    _, _, s = _searcher(rng, n=300)
+    q = jnp.asarray(rng.normal(size=(2, 2)), jnp.float32)
+    for bad in (0, -4):
+        with pytest.raises(ValueError, match="d_chunk"):
+            api.ExecutionPlan(d_chunk=bad)
+    for backend in ("jnp", "exact"):
+        with pytest.raises(ValueError, match="d_chunk"):
+            s.with_plan(backend=backend, d_chunk=8).search(q, 3)
+    # count-only pallas_stacked never ranks candidates either
+    with pytest.raises(ValueError, match="d_chunk"):
+        s.with_plan(backend="pallas_stacked", d_chunk=8).count_at(
+            q, jnp.ones((2,), jnp.int32)
+        )
+    p = s.with_plan(backend="pallas", d_chunk=8)
+    assert p.search(q, 3).ids.shape == (2, 3)
+    assert p.with_plan(backend="exact").plan.d_chunk is None  # dropped
+    assert p.with_plan(backend="pallas_gather").plan.d_chunk == 8  # kept
+
+
+def test_pallas_gather_registered_and_bit_identical(rng):
+    """The gather pipeline survives as a full registered backend (search,
+    classify, count_at) and matches the fused default bit-for-bit."""
+    assert "pallas_gather" in api.registered_backends()
+    impl = api.get_backend("pallas_gather")
+    assert impl.supports_interpret and impl.supports_d_chunk
+    _, _, s = _searcher(rng, n=800)
+    q = jnp.asarray(rng.normal(size=(6, 2)), jnp.float32)
+    fused = s.with_plan(backend="pallas")
+    gather = s.with_plan(backend="pallas_gather")
+    _assert_results_equal(fused.search(q, 7), gather.search(q, 7))
+    np.testing.assert_array_equal(
+        np.asarray(fused.classify(q, 7)), np.asarray(gather.classify(q, 7))
+    )
+    radii = jnp.full((6,), 5, jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(fused.count_at(q, radii)),
+        np.asarray(gather.count_at(q, radii)),
+    )
+
+
+def test_from_index_upgrades_pre_layout_tiles(rng):
+    """A pre-layout index (pyr_tiles=None) is upgraded ONCE by from_index;
+    the pallas count path refuses to re-flatten per call."""
+    from repro.core import batched
+    from repro.core.grid import flatten_pyramid_tiles
+
+    pts, labels, s = _searcher(rng, n=400)
+    stripped = s.index._replace(pyr_tiles=None)
+    up = api.ActiveSearcher.from_index(stripped, s.cfg)
+    assert up.index.pyr_tiles is not None
+    np.testing.assert_array_equal(
+        np.asarray(up.index.pyr_tiles),
+        np.asarray(flatten_pyramid_tiles(stripped.pyramid, s.cfg.tile)),
+    )
+    q = jnp.asarray(rng.normal(size=(2, 2)), jnp.float32)
+    _assert_results_equal(
+        up.with_plan(backend="pallas").search(q, 3),
+        s.with_plan(backend="pallas").search(q, 3),
+    )
+    # reaching the kernels with a pre-layout index is a hard error now
+    with pytest.raises(ValueError, match="pyr_tiles"):
+        batched.batched_counts(
+            stripped, s.cfg, jnp.zeros((1, 2), jnp.float32),
+            jnp.ones((1,), jnp.int32),
+        )

@@ -233,6 +233,173 @@ def test_candidate_topk_partially_invalid_fewer_than_k(rng):
     assert bool(jnp.all(gi[:, 3:] == -1))
 
 
+# ---------------------------------------------------- csr_candidate_topk ----
+
+
+def _csr_fixture(rng, n=600, d=6, b=5, w=7, rcap=16):
+    store = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    starts = jnp.asarray(rng.integers(0, n - 4, size=(b, w)), jnp.int32)
+    # spans from empty through overflowing (end - start > rcap)
+    ends = starts + jnp.asarray(
+        rng.integers(0, rcap + 6, size=(b, w)), jnp.int32
+    )
+    ends = jnp.minimum(ends, n)
+    return store, starts, ends, q
+
+
+@pytest.mark.parametrize("metric", ["l2", "l1"])
+@pytest.mark.parametrize("k", [1, 5, 16])
+def test_csr_candidate_topk_sweep(rng, metric, k):
+    """The fused gather+distance+top-k kernel == its dense-gather oracle
+    BIT-FOR-BIT (global CSR indices included), spans spanning empty rows,
+    partial rows, and row_cap-overflowing rows."""
+    store, starts, ends, q = _csr_fixture(rng)
+    gd, gi = ops.csr_candidate_topk(
+        store, starts, ends, q, k, store.shape[0], 16, metric=metric,
+        interpret=True,
+    )
+    wd, wi = ref.csr_candidate_topk(
+        store, starts, ends, q, k, store.shape[0], 16, metric=metric
+    )
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_csr_candidate_topk_paper_mode(rng):
+    """center_cells + radii reproduce mode='paper': rank floor(coords)+0.5
+    cell centers and mask candidates outside the Eq.-1 circle."""
+    store, starts, ends, _ = _csr_fixture(rng, d=2)
+    store = store * 8.0  # spread across cells so floor() matters
+    q = jnp.asarray(rng.uniform(-16, 16, size=(5, 2)), jnp.float32)
+    radii = jnp.asarray(rng.uniform(1.0, 12.0, size=(5,)), jnp.float32)
+    gd, gi = ops.csr_candidate_topk(
+        store, starts, ends, q, 4, store.shape[0], 16, radii=radii,
+        center_cells=True, interpret=True,
+    )
+    wd, wi = ref.csr_candidate_topk(
+        store, starts, ends, q, 4, store.shape[0], 16, radii=radii,
+        center_cells=True,
+    )
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_csr_candidate_topk_live_boundary(rng):
+    """Spans that reach past the live CSR length n (store rows >= n are
+    padding) never surface a padded row."""
+    n_live, n_pad = 40, 64
+    store = jnp.asarray(rng.normal(size=(n_pad, 4)), jnp.float32)
+    starts = jnp.asarray([[30, 38, 0]], jnp.int32)
+    ends = jnp.asarray([[50, 64, 8]], jnp.int32)  # overrun the live region
+    q = jnp.zeros((1, 4), jnp.float32)
+    gd, gi = ops.csr_candidate_topk(
+        store, starts, ends, q, 32, n_live, 16, interpret=True
+    )
+    wd, wi = ref.csr_candidate_topk(store, starts, ends, q, 32, n_live, 16)
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    live = np.asarray(gi)[np.asarray(gi) >= 0]
+    assert (live < n_live).all()
+
+
+def test_csr_candidate_topk_k_exceeds_window(rng):
+    """k > w*row_cap: the streaming select pads with +inf / -1."""
+    store, starts, ends, q = _csr_fixture(rng, b=2, w=2, rcap=4)
+    k = 2 * 4 + 3
+    gd, gi = ops.csr_candidate_topk(
+        store, starts, ends, q, k, store.shape[0], 4, interpret=True
+    )
+    wd, wi = ref.csr_candidate_topk(store, starts, ends, q, k,
+                                    store.shape[0], 4)
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    assert bool(jnp.all(jnp.isinf(gd[:, -3:]))) and bool(jnp.all(gi[:, -3:] == -1))
+
+
+def test_csr_candidate_topk_d_chunk_accumulation(rng):
+    """An explicit d_chunk cap trades the single-sum reduction for bounded
+    VMEM (documented reassociation of the float32 sums): distances stay
+    allclose to the one-step oracle and the selected candidates agree."""
+    store, starts, ends, q = _csr_fixture(rng, d=10)
+    n, rcap, k = store.shape[0], 16, 5
+    wd, wi = ref.csr_candidate_topk(store, starts, ends, q, k, n, rcap)
+    for dc in (3, 4, 10, 64):
+        gd, gi = ops.csr_candidate_topk(
+            store, starts, ends, q, k, n, rcap, d_chunk=dc, interpret=True
+        )
+        np.testing.assert_allclose(np.asarray(gd), np.asarray(wd),
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=f"d_chunk={dc}")
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi),
+                                      err_msg=f"d_chunk={dc}")
+
+
+def test_csr_candidate_topk_matches_dense_kernel_large_d(rng):
+    """The inter-KERNEL invariant behind backend parity: fused == the
+    gather pipeline's dense candidate_topk BIT-for-bit — including d large
+    enough (d=10 here) that both kernels' reductions drift 1 ulp from the
+    big-tensor jnp oracle in the same direction."""
+    store, starts, ends, q = _csr_fixture(rng, d=10)
+    n, rcap, k = store.shape[0], 16, 5
+    b = q.shape[0]
+    gd, gi = ops.csr_candidate_topk(
+        store, starts, ends, q, k, n, rcap, interpret=True
+    )
+    s_cl = jnp.clip(starts, 0, n - rcap)
+    j = s_cl[:, :, None] + jnp.arange(rcap, dtype=jnp.int32)
+    ok = (j >= starts[:, :, None]) & (j < ends[:, :, None]) & (j < n)
+    flat = j.reshape(b, -1)
+    dd, di = ops.candidate_topk(
+        jnp.take(store, flat, axis=0), ok.reshape(b, -1), q, k,
+        d_chunk=store.shape[1], interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(dd))
+    gflat = jnp.where(
+        di >= 0, jnp.take_along_axis(flat, jnp.maximum(di, 0), axis=1), -1
+    )
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(gflat))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=hst.integers(0, 2**31 - 1))
+def test_csr_candidate_topk_property(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(32, 400))
+    d = int(rng.integers(2, 12))
+    b = int(rng.integers(1, 5))
+    w = int(rng.integers(1, 6))
+    rcap = int(rng.choice([4, 8, 16]))
+    rcap = min(rcap, n)
+    k = int(rng.integers(1, 9))
+    store = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    starts = jnp.asarray(rng.integers(0, n, size=(b, w)), jnp.int32)
+    ends = jnp.minimum(
+        starts + jnp.asarray(rng.integers(0, rcap + 4, size=(b, w)), jnp.int32),
+        n,
+    )
+    gd, gi = ops.csr_candidate_topk(
+        store, starts, ends, q, k, n, rcap, interpret=True
+    )
+    wd, wi = ref.csr_candidate_topk(store, starts, ends, q, k, n, rcap)
+    # at larger drawn d the kernel's per-row reduction can sit 1 ulp from
+    # the big-tensor oracle (see ..._matches_dense_kernel_large_d, which
+    # pins the inter-kernel BIT contract); selection must still agree
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_csr_candidate_topk_store_too_small_raises(rng):
+    store = jnp.zeros((4, 3), jnp.float32)
+    with pytest.raises(ValueError, match="row_cap"):
+        ops.csr_candidate_topk(
+            store, jnp.zeros((1, 2), jnp.int32), jnp.zeros((1, 2), jnp.int32),
+            jnp.zeros((1, 3), jnp.float32), 2, 4, 8, interpret=True,
+        )
+
+
 def test_tile_count_zero_radius(rng):
     """r=0: only a cell whose center coincides with the query could count."""
     s, tile = 32, 8
