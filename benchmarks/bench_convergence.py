@@ -1,14 +1,32 @@
-"""Eq. 1 radius-iteration behaviour: convergence rate, iteration counts, and
-the effect of r0 (the paper observes r0=100 'seems too small' for sparse
-data — time grows as the radius walks out)."""
+"""Eq. 1 radius-iteration behaviour: convergence rate, iteration counts, the
+effect of r0 (the paper observes r0=100 'seems too small' for sparse data —
+time grows as the radius walks out), and the ISSUE-6 adaptive schedule:
+per-query pyramid-seeded start radii + masked early exit.
+
+Artifacts land in BENCH_convergence.json (REPRO_BENCH_ARTIFACTS dir):
+  adaptive.baseline / early_exit / adaptive — converged_frac, mean/p99
+  iters, iterations_saved and tile_dmas_skipped vs the always-on fixed-r0
+  schedule, plus the parity flags render_bench_table.py --check gates on
+  (the schedule must stay bit-identical to the jnp oracle, and the adaptive
+  seed must actually REDUCE mean iterations on the skewed-density config).
+
+Env knobs:
+  REPRO_BENCH_QUICK=1      shrink sweeps to CI-friendly sizes
+  REPRO_BENCH_ARTIFACTS=D  directory for BENCH_convergence.json (default ".")
+"""
 
 from __future__ import annotations
+
+import json
+import os
+import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Csv, paper_data
+from repro.core import batched
 from repro.core import pyramid as pyr
 from repro.core import projection as proj_lib
 from repro.core.grid import GridConfig, build_index
@@ -17,13 +35,132 @@ from repro.core.projection import identity_projection
 K = 11
 
 
-def main(n=20_000, r0s=(2, 8, 32, 100, 400)) -> None:
+def _quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+
+def _schedule_stats(stats) -> dict:
+    it = np.asarray(stats["iters"], np.float64)
+    return {
+        "converged_frac": float(np.mean(np.asarray(stats["converged"],
+                                                   np.float64))),
+        "mean_iters": float(it.mean()),
+        "p99_iters": float(np.percentile(it, 99)),
+        "mean_radius": float(np.mean(np.asarray(stats["radius"], np.float64))),
+    }
+
+
+def _stats_match(a, b) -> bool:
+    return all(
+        np.array_equal(np.asarray(a[key]), np.asarray(b[key]))
+        for key in ("radius", "count", "iters", "converged")
+    )
+
+
+def bench_adaptive(rng, csv: Csv) -> dict:
+    """The ISSUE-6 headline numbers on a skewed-density set: clusters of very
+    different spread + sparse background, global r0 deliberately tuned to
+    NONE of them (the paper's fixed-r0 failure mode).  Three variants of the
+    SAME batched loop:
+
+      baseline   — fixed r0, always-on counting (the pre-ISSUE-6 schedule)
+      early_exit — fixed r0, converged lanes skip their tile DMAs
+      adaptive   — pyramid-seeded per-query r0 + early exit
+
+    Schedules are bit-identical between baseline and early_exit (the mask
+    only elides work), so iterations_saved comes entirely from the adaptive
+    seed; tile_dmas_skipped counts the 2x2-cover DMAs the mask elided.
+    """
+    b = 32 if _quick() else 64
+    pts = np.concatenate([
+        rng.normal([2, 2, 0, 0], 0.15, size=(600, 4)),
+        rng.normal([-2, -2, 0, 0], 0.8, size=(400, 4)),
+        rng.uniform(-4, 4, size=(200, 4)),
+    ]).astype(np.float32)
+    cfg = GridConfig(grid_size=256, tile=16, window=48, row_cap=48, r0=200,
+                     k_slack=3.0)
+    pts_j = jnp.asarray(pts)
+    proj = proj_lib.pca_projection(pts_j, grid_dim=2)
+    index = build_index(pts_j, cfg, proj)
+    q = jnp.asarray(pts[rng.choice(len(pts), b, replace=False)])
+    qg = proj_lib.to_grid_coords(proj, q, cfg.grid_size)
+
+    base = batched.radius_search_batched(index, cfg, qg, K, early_exit=False)
+    early = batched.radius_search_batched(index, cfg, qg, K, early_exit=True)
+    adapt = batched.radius_search_batched(index, cfg, qg, K,
+                                          adaptive_r0=True, early_exit=True)
+    oracle = jax.vmap(
+        lambda g: pyr.radius_search(index, cfg, g, K, adaptive_r0=True)
+    )(qg)
+
+    # DMA accounting: the always-on loop issues 4 cover-tile DMAs per lane
+    # per loop iteration (the loop runs max-lane-iters times) + 4 per lane
+    # for the full post-loop recount
+    loop_iters = int(np.asarray(base["iters"]).max())
+    always_on_dmas = 4 * b * loop_iters + 4 * b
+    skipped = int(adapt["tile_dmas_skipped"])
+    iters_saved = int(np.asarray(base["iters"]).sum()
+                      - np.asarray(adapt["iters"]).sum())
+
+    out = {
+        "config": {
+            "batch": b, "k": K, "grid_size": cfg.grid_size,
+            "tile": cfg.tile, "r0": cfg.r0, "k_slack": cfg.k_slack,
+        },
+        "baseline": _schedule_stats(base),
+        "early_exit": {
+            **_schedule_stats(early),
+            "tile_dmas_skipped": int(early["tile_dmas_skipped"]),
+        },
+        "adaptive": {
+            **_schedule_stats(adapt),
+            "tile_dmas_skipped": skipped,
+        },
+        "mean_iters_reduction": (
+            _schedule_stats(base)["mean_iters"]
+            - _schedule_stats(adapt)["mean_iters"]
+        ),
+        "iterations_saved": iters_saved,
+        "always_on_tile_dmas": always_on_dmas,
+        "tile_dmas_skipped_frac": skipped / always_on_dmas,
+        # early exit must not change the schedule; the adaptive batched loop
+        # must match the vmapped jnp oracle lane for lane
+        "parity_early_exit_vs_baseline": _stats_match(early, base),
+        "parity_adaptive_vs_jnp_oracle": _stats_match(adapt, oracle),
+    }
+    csv.row("adaptive_baseline", f"B={b} r0={cfg.r0}",
+            f"{out['baseline']['converged_frac']:.3f}",
+            f"{out['baseline']['mean_iters']:.2f}",
+            f"{out['baseline']['mean_radius']:.1f}", "-")
+    csv.row("adaptive_early_exit", f"B={b} r0={cfg.r0}",
+            f"{out['early_exit']['converged_frac']:.3f}",
+            f"{out['early_exit']['mean_iters']:.2f}",
+            f"{out['early_exit']['mean_radius']:.1f}",
+            out["early_exit"]["tile_dmas_skipped"])
+    csv.row("adaptive_seeded", f"B={b} seeded",
+            f"{out['adaptive']['converged_frac']:.3f}",
+            f"{out['adaptive']['mean_iters']:.2f}",
+            f"{out['adaptive']['mean_radius']:.1f}", skipped)
+    print(f"[bench_convergence] adaptive schedule: mean iters "
+          f"{out['baseline']['mean_iters']:.2f} -> "
+          f"{out['adaptive']['mean_iters']:.2f} "
+          f"({iters_saved} iterations saved), "
+          f"{skipped}/{always_on_dmas} tile DMAs skipped "
+          f"({out['tile_dmas_skipped_frac']:.0%})", flush=True)
+    return out
+
+
+def main(n=None, r0s=None) -> None:
     rng = np.random.default_rng(0)
+    n = n or (5_000 if _quick() else 20_000)
+    r0s = r0s or ((8, 100) if _quick() else (2, 8, 32, 100, 400))
+    grid = 256 if _quick() else 1024
     pts, labels = paper_data(rng, n)
-    q, _ = paper_data(rng, 200)
+    q, _ = paper_data(rng, 50 if _quick() else 200)
     csv = Csv("r0,converged_frac,mean_iters,mean_radius,mean_count")
+    sweep = []
     for r0 in r0s:
-        cfg = GridConfig(grid_size=1024, tile=16, n_classes=3, window=64,
+        cfg = GridConfig(grid_size=grid, tile=16, n_classes=3, window=64,
                          row_cap=64, r0=r0, k_slack=2.0)
         idx = build_index(pts, cfg, identity_projection(pts), labels=labels)
 
@@ -32,13 +169,42 @@ def main(n=20_000, r0s=(2, 8, 32, 100, 400)) -> None:
             return pyr.radius_search(idx, cfg, qg, K)
 
         stats = jax.vmap(stats_of)(q)
+        row = {
+            "r0": r0,
+            "converged_frac": float(
+                jnp.mean(stats["converged"].astype(jnp.float32))
+            ),
+            "mean_iters": float(jnp.mean(stats["iters"].astype(jnp.float32))),
+            "mean_radius": float(
+                jnp.mean(stats["radius"].astype(jnp.float32))
+            ),
+            "mean_count": float(jnp.mean(stats["count"].astype(jnp.float32))),
+        }
+        sweep.append(row)
         csv.row(
             r0,
-            f"{float(jnp.mean(stats['converged'].astype(jnp.float32))):.3f}",
-            f"{float(jnp.mean(stats['iters'].astype(jnp.float32))):.2f}",
-            f"{float(jnp.mean(stats['radius'].astype(jnp.float32))):.1f}",
-            f"{float(jnp.mean(stats['count'].astype(jnp.float32))):.1f}",
+            f"{row['converged_frac']:.3f}",
+            f"{row['mean_iters']:.2f}",
+            f"{row['mean_radius']:.1f}",
+            f"{row['mean_count']:.1f}",
         )
+
+    csv2 = Csv("variant,config,converged_frac,mean_iters,mean_radius,"
+               "tile_dmas_skipped")
+    adaptive = bench_adaptive(rng, csv2)
+
+    results = {
+        "schema": 1,
+        "timestamp": time.time(),
+        "quick": _quick(),
+        "r0_sweep": sweep,
+        "adaptive": adaptive,
+    }
+    art_dir = os.environ.get("REPRO_BENCH_ARTIFACTS", ".")
+    path = os.path.join(art_dir, "BENCH_convergence.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"[bench_convergence] wrote {path}", flush=True)
     return csv
 
 

@@ -1,6 +1,7 @@
 """Render the CI perf artifacts (BENCH_kernels.json / BENCH_e2e.json /
-BENCH_mutation.json) into the markdown throughput table embedded in
-README.md between the `<!-- BENCH TABLE BEGIN/END -->` markers.
+BENCH_mutation.json / BENCH_convergence.json) into the markdown throughput
+table embedded in README.md between the `<!-- BENCH TABLE BEGIN/END -->`
+markers.
 
   python scripts/render_bench_table.py --artifacts bench-artifacts
   python scripts/render_bench_table.py --artifacts bench-artifacts --check
@@ -81,6 +82,23 @@ def render(art_dir: str) -> str:
         rows.append(f"| mutation | parity vs rebuild | "
                     f"{mu['parity_incremental_vs_rebuild']} |")
 
+    conv = _load(art_dir, "BENCH_convergence.json")
+    if conv and "adaptive" in conv:
+        ad = conv["adaptive"]
+        rows.append(f"| convergence | mean Eq.-1 iters, fixed r0 → adaptive | "
+                    f"{ad['baseline']['mean_iters']:.2f} → "
+                    f"{ad['adaptive']['mean_iters']:.2f} "
+                    f"({ad['iterations_saved']} saved) |")
+        rows.append(f"| convergence | converged frac (adaptive) | "
+                    f"{ad['adaptive']['converged_frac']:.3f} "
+                    f"(p99 iters {ad['adaptive']['p99_iters']:.0f}) |")
+        rows.append(f"| convergence | tile DMAs skipped (early exit) | "
+                    f"{ad['adaptive']['tile_dmas_skipped']:,} / "
+                    f"{ad['always_on_tile_dmas']:,} "
+                    f"({ad['tile_dmas_skipped_frac']:.0%}) |")
+        rows.append(f"| convergence | schedule parity vs jnp oracle | "
+                    f"{ad['parity_adaptive_vs_jnp_oracle']} |")
+
     if len(rows) == 2:
         rows.append("| (no artifacts found) | — | — |")
     return "\n".join(rows)
@@ -110,6 +128,20 @@ def _parity_problems(art_dir: str) -> list[str]:
         if rec.get("parity_vs_jnp") is False:
             problems.append(f"BENCH_e2e.json: backend {name!r} diverged "
                             f"from the jnp reference (parity_vs_jnp)")
+    conv = _load(art_dir, "BENCH_convergence.json")
+    ad = (conv or {}).get("adaptive") or {}
+    if ad.get("parity_early_exit_vs_baseline") is False:
+        problems.append("BENCH_convergence.json: early exit CHANGED the "
+                        "radius schedule — the lane mask must only elide "
+                        "work (parity_early_exit_vs_baseline)")
+    if ad.get("parity_adaptive_vs_jnp_oracle") is False:
+        problems.append("BENCH_convergence.json: adaptive batched schedule "
+                        "diverged from the vmapped jnp oracle "
+                        "(parity_adaptive_vs_jnp_oracle)")
+    if ad and ad.get("mean_iters_reduction", 1) <= 0:
+        problems.append("BENCH_convergence.json: adaptive r0 did not reduce "
+                        "mean Eq.-1 iterations on the skewed-density config "
+                        "(mean_iters_reduction <= 0)")
     return problems
 
 

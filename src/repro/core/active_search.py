@@ -208,9 +208,10 @@ def _topk_result(
     )
 
 
-@partial(jax.jit, static_argnames=("cfg", "k", "mode"))
+@partial(jax.jit, static_argnames=("cfg", "k", "mode", "adaptive_r0"))
 def search_one(
-    index: GridIndex, cfg: GridConfig, query: jax.Array, k: int, mode: str = "refined"
+    index: GridIndex, cfg: GridConfig, query: jax.Array, k: int,
+    mode: str = "refined", adaptive_r0: bool = False,
 ) -> SearchResult:
     """Active search for ONE query point (original space, shape (d,)).
 
@@ -218,9 +219,11 @@ def search_one(
                     (the paper returns the circle contents when n == k).
     mode="refined": candidates re-ranked by the true metric in the original
                     space (exact kNN restricted to the window; recommended).
+    adaptive_r0:    seed Eq. 1 from the pyramid's local-density sketch
+                    (pyramid.seed_radius) instead of the global cfg.r0.
     """
     q_grid = proj_lib.to_grid_coords(index.proj, query, cfg.grid_size)
-    stats = pyr.radius_search(index, cfg, q_grid, k)
+    stats = pyr.radius_search(index, cfg, q_grid, k, adaptive_r0=adaptive_r0)
     r = stats["radius"]
     # the flag must fire whenever candidates were DROPPED: circle wider than
     # the window, or a window row overflowing its row_cap slice (same rule,
@@ -242,11 +245,14 @@ def search_one(
     return _topk_result(cand, dists, k, stats, truncated)
 
 
-@partial(jax.jit, static_argnames=("cfg", "k", "mode"))
+@partial(jax.jit, static_argnames=("cfg", "k", "mode", "adaptive_r0"))
 def _search_jnp(
-    index: GridIndex, cfg: GridConfig, queries: jax.Array, k: int, mode: str = "refined"
+    index: GridIndex, cfg: GridConfig, queries: jax.Array, k: int,
+    mode: str = "refined", adaptive_r0: bool = False,
 ) -> SearchResult:
-    return jax.vmap(lambda q: search_one(index, cfg, q, k, mode))(queries)
+    return jax.vmap(
+        lambda q: search_one(index, cfg, q, k, mode, adaptive_r0)
+    )(queries)
 
 
 def _deprecated_searcher(index, cfg, backend, interpret, chunk_size, what):
@@ -288,9 +294,10 @@ def search(
     ).search(queries, k, mode=mode)
 
 
-@partial(jax.jit, static_argnames=("cfg", "k", "mode"))
+@partial(jax.jit, static_argnames=("cfg", "k", "mode", "adaptive_r0"))
 def _classify_jnp(
-    index: GridIndex, cfg: GridConfig, queries: jax.Array, k: int, mode: str = "refined"
+    index: GridIndex, cfg: GridConfig, queries: jax.Array, k: int,
+    mode: str = "refined", adaptive_r0: bool = False,
 ) -> jax.Array:
     if cfg.n_classes <= 0:
         raise ValueError("classify() needs an index built with n_classes > 0")
@@ -299,13 +306,16 @@ def _classify_jnp(
 
         def one(q):
             q_grid = proj_lib.to_grid_coords(index.proj, q, cfg.grid_size)
-            stats = pyr.radius_search(index, cfg, q_grid, k)
+            stats = pyr.radius_search(
+                index, cfg, q_grid, k, adaptive_r0=adaptive_r0
+            )
             counts = pyr.count_in_circle(index, cfg, q_grid, stats["radius"])
             return jnp.argmax(counts).astype(jnp.int32)
 
         return jax.vmap(one)(queries)
 
-    res = _search_jnp(index, cfg, queries, k, mode="refined")
+    res = _search_jnp(index, cfg, queries, k, mode="refined",
+                      adaptive_r0=adaptive_r0)
     refined = majority_vote(res.labels, res.valid, cfg.n_classes)
 
     # graceful degradation: when the data is so sparse that the Eq.-1 circle

@@ -74,6 +74,7 @@ def batched_counts(
     q_grid: jax.Array,
     radii: jax.Array,
     interpret: bool | None = None,
+    active: jax.Array | None = None,
 ) -> jax.Array:
     """Per-class circle counts (B, C) for a batch of queries/radii.
 
@@ -81,6 +82,13 @@ def batched_counts(
     query's `level_for_radius` level and window origin are scalar-prefetched,
     so every grid program DMAs its circle from the correct pyramid level of
     the flattened tile array.  No (L, B, C) stack, no L-fold overcount.
+
+    `active` (B,) masks lanes out of the kernel: live lanes are compacted to
+    a dense grid prefix and parked lanes skip their tile DMAs entirely (the
+    Eq.-1 loop passes its not-yet-converged mask here).  Live rows are
+    bit-identical to the unmasked call; parked rows are 0.  The sat counter
+    ignores the mask — its integral-image lookup is O(1) with no DMA to
+    skip.
     """
     if cfg.counter == "sat":
         from repro.core import integral as integral_lib
@@ -106,6 +114,7 @@ def batched_counts(
     return ops.tile_count_multilevel(
         tiles, q_grid, radii.astype(jnp.float32), levels, cfg.tile,
         cfg.level_nblks, metric=cfg.metric, interpret=interpret,
+        active=active,
     )
 
 
@@ -143,6 +152,8 @@ def radius_search_batched(
     q_grid: jax.Array,
     k: int,
     interpret: bool | None = None,
+    adaptive_r0: bool = False,
+    early_exit: bool = True,
 ) -> dict[str, jax.Array]:
     """Eq. 1 for a whole batch at once — all (B,) state arrays advance in one
     `while_loop` whose body is a SINGLE level-scheduled tile_count_multilevel
@@ -150,20 +161,45 @@ def radius_search_batched(
 
     Lane-for-lane identical to `vmap(pyramid.radius_search)`: finished lanes
     freeze (masked update) while the rest keep iterating.
+
+    early_exit=True (default) passes the not-yet-converged lane mask into the
+    count kernel, so converged lanes stop paying: their tile DMAs are elided
+    (parked lanes alias the last live lane's resident blocks) and the post-
+    loop recount only re-counts `best`-fallback lanes — the count a converged
+    lane saw at its hit iteration IS the count at its final radius (the
+    kernel is a deterministic integer reduction), so it is captured in the
+    loop carry instead of recounted.  early_exit=False keeps the legacy
+    unmasked schedule (every lane counts every iteration + one full batch
+    recount); both return bit-identical results — the parity suite pins this.
+
+    adaptive_r0=True seeds each lane's start radius from the pyramid's top
+    levels (`pyramid.seed_radius`, vmapped — the same function the jnp path
+    calls, so seeds match across backends by construction) instead of the
+    global cfg.r0.
+
+    Returns the Eq.-1 stats dict plus `tile_dmas_skipped`: a scalar count of
+    the 2x2-cover tile DMAs the mask elided vs the always-on schedule (0 when
+    early_exit=False or the counter has no tile DMAs to skip).
     """
     b = q_grid.shape[0]
     k_hi = jnp.int32(max(k, math.ceil(k * cfg.k_slack)))
     r_max = jnp.int32(cfg.max_radius)
     sentinel = r_max + 1
+    # the sat counter is an O(1) integral-image lookup — no tile DMAs exist
+    # to skip, so masking would only add permute traffic
+    masked = early_exit and cfg.counter == "pyramid"
 
     def cond(state):
-        t, _r, done, _best = state
+        t, _r, done, _best, _n_hit, _skipped = state
         return jnp.any(jnp.logical_and(t < cfg.max_iters, jnp.logical_not(done)))
 
     def body(state):
-        t, r, done, best = state
+        t, r, done, best, n_hit, skipped = state
         active = jnp.logical_and(t < cfg.max_iters, jnp.logical_not(done))
-        n = batched_counts(index, cfg, q_grid, r, interpret).sum(axis=-1)  # (B,)
+        n = batched_counts(
+            index, cfg, q_grid, r, interpret,
+            active=active if masked else None,
+        ).sum(axis=-1)  # (B,) — parked lanes read 0, frozen below
         hit = jnp.logical_and(n >= k, n <= k_hi)
         best_new = jnp.where(n >= k, jnp.minimum(best, r), best)
         ratio = jnp.sqrt(k / jnp.maximum(n, 1).astype(jnp.float32))
@@ -176,29 +212,60 @@ def radius_search_batched(
             r_new,
         )
         r_next = jnp.where(hit, r, jnp.clip(r_new, 1, r_max))
+        if masked:
+            # 4 cover-tile DMAs per parked lane per iteration
+            skipped = skipped + 4 * jnp.sum(
+                jnp.logical_not(active).astype(jnp.int32)
+            )
         return (
             jnp.where(active, t + 1, t),
             jnp.where(active, r_next, r),
             jnp.where(active, hit, done),
             jnp.where(active, best_new, best),
+            # a lane that hits at radius r keeps r as its final radius, so
+            # the in-loop count IS the final count — capture it here
+            jnp.where(jnp.logical_and(active, hit), n, n_hit),
+            skipped,
         )
 
-    r0 = jnp.full((b,), jnp.clip(jnp.int32(cfg.r0), 1, r_max), jnp.int32)
+    if adaptive_r0:
+        r0 = jax.vmap(lambda g: pyr.seed_radius(index, cfg, g, k))(q_grid)
+    else:
+        # GridConfig rejects out-of-range r0 eagerly, so no silent clip here
+        r0 = jnp.full((b,), jnp.int32(cfg.r0), jnp.int32)
     state0 = (
         jnp.zeros((b,), jnp.int32),
         r0,
         jnp.zeros((b,), bool),
         jnp.full((b,), sentinel, jnp.int32),
+        jnp.zeros((b,), jnp.int32),
+        jnp.int32(0),
     )
-    t, r, converged, best = jax.lax.while_loop(cond, body, state0)
+    t, r, converged, best, n_hit, skipped = jax.lax.while_loop(
+        cond, body, state0
+    )
 
     r_final = jnp.where(converged, r, jnp.where(best <= r_max, best, r_max))
-    n_final = batched_counts(index, cfg, q_grid, r_final, interpret).sum(axis=-1)
+    if masked:
+        # converged lanes already hold their final count (n_hit); recount
+        # only the best/r_max-fallback lanes whose final radius was never
+        # counted as "final" in the loop
+        n_re = batched_counts(
+            index, cfg, q_grid, r_final, interpret,
+            active=jnp.logical_not(converged),
+        ).sum(axis=-1)
+        n_final = jnp.where(converged, n_hit, n_re)
+        skipped = skipped + 4 * jnp.sum(converged.astype(jnp.int32))
+    else:
+        n_final = batched_counts(
+            index, cfg, q_grid, r_final, interpret
+        ).sum(axis=-1)
     return {
         "radius": r_final,
         "count": n_final,
         "iters": t,
         "converged": converged,
+        "tile_dmas_skipped": skipped,
     }
 
 
@@ -367,7 +434,9 @@ register_candidate_pipeline(CandidatePipeline(
 
 @partial(
     jax.jit,
-    static_argnames=("cfg", "k", "mode", "interpret", "pipeline", "d_chunk"),
+    static_argnames=(
+        "cfg", "k", "mode", "interpret", "pipeline", "d_chunk", "adaptive_r0",
+    ),
 )
 def _search_impl(
     index: GridIndex,
@@ -378,6 +447,7 @@ def _search_impl(
     interpret: bool | None = None,
     pipeline: CandidatePipeline | None = None,
     d_chunk: int | None = None,
+    adaptive_r0: bool = False,
 ) -> SearchResult:
     # `pipeline` is the RESOLVED CandidatePipeline (frozen, hashed by its
     # fields, so re-registering a name retraces instead of silently serving
@@ -385,7 +455,9 @@ def _search_impl(
     if pipeline is None:
         pipeline = get_candidate_pipeline("fused")
     q_grid = proj_lib.to_grid_coords(index.proj, queries, cfg.grid_size)  # (B, 2)
-    stats = radius_search_batched(index, cfg, q_grid, k, interpret)
+    stats = radius_search_batched(
+        index, cfg, q_grid, k, interpret, adaptive_r0=adaptive_r0
+    )
     r = stats["radius"]
     start, end = window_spans(index, cfg, q_grid)                   # (B, w)
     truncated = ((2 * r + 1) > jnp.int32(cfg.window)) | jnp.any(
@@ -424,6 +496,7 @@ def search(
     chunk_size: int | None = None,
     pipeline: str = "fused",
     d_chunk: int | None = None,
+    adaptive_r0: bool = False,
 ) -> SearchResult:
     """Batched kernel-backed active search: queries (B, d) -> SearchResult
     with leading B.  Same result contract as the facade's
@@ -433,11 +506,13 @@ def search(
 
     chunk_size streams the batch through fixed-size kernel invocations (one
     static shape, bounded VMEM) — results are bit-identical for any value.
+    adaptive_r0 seeds each query's Eq.-1 start radius from the pyramid
+    (`ExecutionPlan(adaptive_r0=True)` is the facade spelling).
     """
     pipe = get_candidate_pipeline(pipeline)  # eager: bad names raise here
     return run_chunked(
         lambda q: _search_impl(index, cfg, q, k, mode, interpret, pipe,
-                               d_chunk),
+                               d_chunk, adaptive_r0),
         queries,
         chunk_size,
     )
@@ -445,7 +520,9 @@ def search(
 
 @partial(
     jax.jit,
-    static_argnames=("cfg", "k", "mode", "interpret", "pipeline", "d_chunk"),
+    static_argnames=(
+        "cfg", "k", "mode", "interpret", "pipeline", "d_chunk", "adaptive_r0",
+    ),
 )
 def _classify_impl(
     index: GridIndex,
@@ -456,6 +533,7 @@ def _classify_impl(
     interpret: bool | None = None,
     pipeline: CandidatePipeline | None = None,
     d_chunk: int | None = None,
+    adaptive_r0: bool = False,
 ) -> jax.Array:
     if cfg.n_classes <= 0:
         raise ValueError("classify() needs an index built with n_classes > 0")
@@ -463,12 +541,15 @@ def _classify_impl(
     q_grid = proj_lib.to_grid_coords(index.proj, queries, cfg.grid_size)
 
     if mode == "paper":
-        stats = radius_search_batched(index, cfg, q_grid, k, interpret)
+        stats = radius_search_batched(
+            index, cfg, q_grid, k, interpret, adaptive_r0=adaptive_r0
+        )
         counts = batched_counts(index, cfg, q_grid, stats["radius"], interpret)
         return jnp.argmax(counts, axis=-1).astype(jnp.int32)
 
     res = _search_impl(index, cfg, queries, k, mode="refined",
-                       interpret=interpret, pipeline=pipeline, d_chunk=d_chunk)
+                       interpret=interpret, pipeline=pipeline, d_chunk=d_chunk,
+                       adaptive_r0=adaptive_r0)
     refined = majority_vote(res.labels, res.valid, cfg.n_classes)
 
     # same graceful degradation as the jnp path, but counted by the kernel
@@ -489,6 +570,7 @@ def classify(
     chunk_size: int | None = None,
     pipeline: str = "fused",
     d_chunk: int | None = None,
+    adaptive_r0: bool = False,
 ) -> jax.Array:
     """Batched kNN classification — same result contract as the facade's
     `ActiveSearcher.classify` (repro.api), with every count pass going
@@ -496,7 +578,7 @@ def classify(
     pipe = get_candidate_pipeline(pipeline)  # eager: bad names raise here
     return run_chunked(
         lambda q: _classify_impl(index, cfg, q, k, mode, interpret, pipe,
-                                 d_chunk),
+                                 d_chunk, adaptive_r0),
         queries,
         chunk_size,
     )

@@ -66,7 +66,10 @@ def build_sharded_index(
     return fn(pts_s, lab_s)
 
 
-@partial(jax.jit, static_argnames=("cfg", "k", "mode", "axis", "mesh"))
+@partial(
+    jax.jit,
+    static_argnames=("cfg", "k", "mode", "axis", "mesh", "adaptive_r0"),
+)
 def sharded_search(
     index: GridIndex,
     cfg: GridConfig,
@@ -75,6 +78,7 @@ def sharded_search(
     mesh: Mesh,
     axis: str,
     mode: str = "refined",
+    adaptive_r0: bool = False,
 ) -> SearchResult:
     """Active search over the sharded index; queries (B, d) replicated.
 
@@ -82,12 +86,15 @@ def sharded_search(
     every shard runs its OWN per-shard ActiveSearcher handle (jnp plan) under
     shard_map, then the per-shard top-k lists are merged.  Returns the
     globally merged top-k per query (ids are global point ids).
+    `adaptive_r0` seeds each shard's Eq.-1 loop from that shard's OWN
+    pyramid (density differs per shard, so seeds do too — exactly like every
+    other per-shard Eq.-1 quantity).
     """
     # function-level import: engine registers this module's search as a
     # backend, so a top-level import would be circular
     from repro.core import engine as eng
 
-    local_plan = eng.ExecutionPlan(backend="jnp")
+    local_plan = eng.ExecutionPlan(backend="jnp", adaptive_r0=adaptive_r0)
 
     def local_query(idx_stacked, q):
         idx = jax.tree.map(lambda a: a[0], idx_stacked)

@@ -80,6 +80,12 @@ class ExecutionPlan:
                 are `jax.device_put` there before dispatch.
     donate:     donate the caller's query buffer on placement (serve-scale
                 batches avoid a copy; requires `device`).
+    adaptive_r0: seed each query's Eq.-1 start radius from the pyramid's
+                top levels (`pyramid.seed_radius` — a free local-density
+                sketch) instead of the global cfg.r0.  Changes only WHERE
+                the radius schedule starts, never what the search returns
+                at the radius it converges to; backends that run the Eq.-1
+                loop (jnp / pallas / pallas_gather / sharded) support it.
     """
 
     backend: str = "jnp"
@@ -88,6 +94,7 @@ class ExecutionPlan:
     d_chunk: int | None = None
     device: Any = None
     donate: bool = False
+    adaptive_r0: bool = False
 
     def __post_init__(self):
         if self.chunk_size is not None and self.chunk_size <= 0:
@@ -119,9 +126,11 @@ class BackendImpl:
     benchmark baseline); the facade raises eagerly when an op is missing.
     `supports_interpret` gates `plan.interpret`; `supports_d_chunk` gates
     `plan.d_chunk` (only backends that run a Pallas candidate re-rank can
-    honor the accumulation cap).  `requires_mesh` marks backends that only
-    work on a `build_sharded` handle (mesh + axis), so eager validators
-    (e.g. serve's CLI check) can reject them up front without name-matching.
+    honor the accumulation cap); `supports_adaptive_r0` gates
+    `plan.adaptive_r0` (only backends that run the Eq.-1 radius loop can
+    seed it).  `requires_mesh` marks backends that only work on a
+    `build_sharded` handle (mesh + axis), so eager validators (e.g. serve's
+    CLI check) can reject them up front without name-matching.
     """
 
     search: Callable[..., SearchResult] | None = None
@@ -129,6 +138,7 @@ class BackendImpl:
     count_at: Callable[..., jax.Array] | None = None
     supports_interpret: bool = False
     supports_d_chunk: bool = False
+    supports_adaptive_r0: bool = False
     requires_mesh: bool = False
     description: str = ""
 
@@ -263,6 +273,9 @@ class ActiveSearcher:
                     overrides = {**overrides, "interpret": None}
                 if not impl.supports_d_chunk and "d_chunk" not in overrides:
                     overrides = {**overrides, "d_chunk": None}
+                if (not impl.supports_adaptive_r0
+                        and "adaptive_r0" not in overrides):
+                    overrides = {**overrides, "adaptive_r0": False}
         new = plan if plan is not None else dataclasses.replace(self.plan, **overrides)
         return dataclasses.replace(self, plan=new)
 
@@ -339,6 +352,12 @@ class ActiveSearcher:
             raise ValueError(
                 f"d_chunk= only applies to Pallas candidate-ranking "
                 f"backends; backend {self.plan.backend!r} does not "
+                f"support it"
+            )
+        if self.plan.adaptive_r0 and not impl.supports_adaptive_r0:
+            raise ValueError(
+                f"adaptive_r0= only applies to backends that run the Eq.-1 "
+                f"radius loop; backend {self.plan.backend!r} does not "
                 f"support it"
             )
         fn = getattr(impl, op)
@@ -442,13 +461,15 @@ class ActiveSearcher:
 
 
 def _jnp_search(s: ActiveSearcher, queries, k, mode):
-    return _search_jnp(s.index, s.cfg, queries, k, mode)
+    return _search_jnp(s.index, s.cfg, queries, k, mode,
+                       adaptive_r0=s.plan.adaptive_r0)
 
 
 def _jnp_classify(s: ActiveSearcher, queries, k, mode):
     from repro.core.active_search import _classify_jnp
 
-    return _classify_jnp(s.index, s.cfg, queries, k, mode)
+    return _classify_jnp(s.index, s.cfg, queries, k, mode,
+                         adaptive_r0=s.plan.adaptive_r0)
 
 
 def _jnp_count_at(s: ActiveSearcher, q_grid, radii):
@@ -468,6 +489,7 @@ def _pallas_search(s: ActiveSearcher, queries, k, mode, pipeline="fused"):
     return batched.search(
         s.index, s.cfg, queries, k, mode=mode, interpret=s.plan.interpret,
         pipeline=pipeline, d_chunk=s.plan.d_chunk,
+        adaptive_r0=s.plan.adaptive_r0,
     )
 
 
@@ -477,6 +499,7 @@ def _pallas_classify(s: ActiveSearcher, queries, k, mode, pipeline="fused"):
     return batched.classify(
         s.index, s.cfg, queries, k, mode=mode, interpret=s.plan.interpret,
         pipeline=pipeline, d_chunk=s.plan.d_chunk,
+        adaptive_r0=s.plan.adaptive_r0,
     )
 
 
@@ -569,7 +592,8 @@ def _sharded_search(s: ActiveSearcher, queries, k, mode):
     from repro.core import distributed as dist
 
     return dist.sharded_search(
-        s.index, s.cfg, queries, k, s.mesh, s.axis, mode=mode
+        s.index, s.cfg, queries, k, s.mesh, s.axis, mode=mode,
+        adaptive_r0=s.plan.adaptive_r0,
     )
 
 
@@ -591,12 +615,13 @@ def _sharded_classify(s: ActiveSearcher, queries, k, mode):
 
 register_backend("jnp", BackendImpl(
     search=_jnp_search, classify=_jnp_classify, count_at=_jnp_count_at,
+    supports_adaptive_r0=True,
     description="per-query reference pipeline under jax.vmap (pure lax/jnp)",
 ))
 register_backend("pallas", BackendImpl(
     search=_pallas_search, classify=_pallas_classify,
     count_at=_pallas_count_at, supports_interpret=True,
-    supports_d_chunk=True,
+    supports_d_chunk=True, supports_adaptive_r0=True,
     description="batched kernel pipeline: level-scheduled "
                 "tile_count_multilevel + FUSED csr_candidate_topk (candidate "
                 "rows DMA'd straight from the CSR store; no (B, w*row_cap) "
@@ -605,7 +630,7 @@ register_backend("pallas", BackendImpl(
 register_backend("pallas_gather", BackendImpl(
     search=_pallas_gather_search, classify=_pallas_gather_classify,
     count_at=_pallas_count_at, supports_interpret=True,
-    supports_d_chunk=True,
+    supports_d_chunk=True, supports_adaptive_r0=True,
     description="benchmark baseline / second oracle: same counting, but the "
                 "candidate stage is the PR-1..4 one-shot (B, w*row_cap) "
                 "four-field gather + dense candidate_topk",
@@ -622,6 +647,7 @@ register_backend("exact", BackendImpl(
 ))
 register_backend("sharded", BackendImpl(
     search=_sharded_search, classify=_sharded_classify, requires_mesh=True,
+    supports_adaptive_r0=True,
     description="per-shard searchers under shard_map + all_gather top-k "
                 "merge (core/distributed.py; build via build_sharded)",
 ))

@@ -65,6 +65,20 @@ class GridConfig:
             raise ValueError(
                 f"unknown counter {self.counter!r}; expected 'pyramid' or 'sat'"
             )
+        # The radius loop used to jnp.clip(r0, 1, max_radius) silently, so a
+        # typo'd r0 (0, negative, or wider than the countable max) ran with a
+        # DIFFERENT start radius than configured.  Reject it here, like the
+        # tile/metric/counter checks above.
+        if self.r0 <= 0:
+            raise ValueError(
+                f"r0={self.r0} must be a positive start radius (pixels)"
+            )
+        if self.r0 > self.max_radius:
+            raise ValueError(
+                f"r0={self.r0} exceeds max_radius={self.max_radius} (the "
+                f"largest radius countable from the top pyramid tile for "
+                f"grid_size={self.grid_size}, tile={self.tile})"
+            )
 
     @property
     def n_channels(self) -> int:

@@ -88,8 +88,47 @@ def count_total(index: GridIndex, cfg: GridConfig, q: jax.Array, r: jax.Array) -
     return count_in_circle(index, cfg, q, r).sum()
 
 
-def radius_search(
+def seed_radius(
     index: GridIndex, cfg: GridConfig, q: jax.Array, k: int
+) -> jax.Array:
+    """Per-query Eq.-1 start radius from the pyramid's top levels.
+
+    The coarse pyramid levels are a free local-density sketch: probe the
+    circle count at the largest window-contained radius of the top level
+    (and of the level below it, whose finer probe wins whenever it already
+    sees >= k points), then apply ONE Eq.-1 step to land the start radius
+    near the query's own k-neighborhood scale.  Queries whose probes see no
+    mass fall back to the global cfg.r0.
+
+    This only changes WHERE the radius loop starts — never what it returns:
+    the loop's acceptance band and fallback logic are untouched, so results
+    follow whatever radius the schedule converges to.  Shared verbatim by
+    the per-query jnp path and (under vmap) the batched pallas path, so the
+    seeds are bit-identical across backends by construction.
+    """
+    r_max = jnp.int32(cfg.max_radius)
+    top = cfg.levels - 1
+    kf = jnp.float32(k)
+
+    def eq1_step(r_probe, n_probe):
+        ratio = jnp.sqrt(kf / jnp.maximum(n_probe, 1).astype(jnp.float32))
+        return jnp.round(r_probe.astype(jnp.float32) * ratio).astype(jnp.int32)
+
+    # largest radius whose circle is FULLY contained by the T-cell window at
+    # level l (the level_for_radius margin, inverted): r = (T - 3) * 2**l / 2
+    r1 = jnp.int32(((cfg.tile - 3) << top) // 2)
+    n1 = _count_at_level(index.pyramid[top], top, q, r1, cfg).sum()
+    est = eq1_step(r1, n1)
+    if top >= 1:
+        r2 = jnp.int32(((cfg.tile - 3) << (top - 1)) // 2)
+        n2 = _count_at_level(index.pyramid[top - 1], top - 1, q, r2, cfg).sum()
+        est = jnp.where(n2 >= k, eq1_step(r2, n2), est)
+    return jnp.where(n1 > 0, jnp.clip(est, 1, r_max), jnp.int32(cfg.r0))
+
+
+def radius_search(
+    index: GridIndex, cfg: GridConfig, q: jax.Array, k: int,
+    adaptive_r0: bool = False,
 ) -> dict[str, jax.Array]:
     """The paper's Eq. 1:  r_{t+1} = round(r_t * sqrt(k / n_t)).
 
@@ -97,6 +136,9 @@ def radius_search(
     (Eq. 1 oscillates on quantized counts) and an acceptance band
     n in [k, ceil(k_slack * k)] (k_slack=1.0 is the paper's exact n == k stop).
     Tracks the smallest radius seen with n >= k as the fallback answer.
+
+    adaptive_r0=True seeds the start radius per query from the pyramid's
+    top levels (`seed_radius`) instead of the global cfg.r0.
     """
     k_hi = jnp.int32(max(k, math.ceil(k * cfg.k_slack)))
     r_max = jnp.int32(cfg.max_radius)
@@ -125,7 +167,8 @@ def radius_search(
         r_next = jnp.where(hit, r, jnp.clip(r_new, 1, r_max))
         return t + 1, r_next, hit, best
 
-    r0 = jnp.clip(jnp.int32(cfg.r0), 1, r_max)
+    # GridConfig rejects out-of-range r0 eagerly, so no silent clip here
+    r0 = seed_radius(index, cfg, q, k) if adaptive_r0 else jnp.int32(cfg.r0)
     t, r, converged, best = lax.while_loop(cond, body, (jnp.int32(0), r0, False, sentinel))
 
     r_final = jnp.where(converged, r, jnp.where(best <= r_max, best, r_max))

@@ -35,12 +35,13 @@ def tile_count(level_arr, queries, radii, scale, tile, metric="l2", interpret=No
 
 
 def tile_count_multilevel(
-    tiles, queries, radii, levels, tile, nblks, metric="l2", interpret=None
+    tiles, queries, radii, levels, tile, nblks, metric="l2", interpret=None,
+    active=None,
 ):
     interpret = _default_interpret() if interpret is None else interpret
     return _tile_count_multilevel(
         tiles, queries, radii, levels, tile, nblks, metric=metric,
-        interpret=interpret,
+        interpret=interpret, active=active,
     )
 
 

@@ -46,8 +46,9 @@ def level_tile_offsets(nblks: tuple[int, ...]) -> tuple[int, ...]:
 
 def _kernel(
     tid_ref,    # scalar prefetch: (B, 4) int32 flat tile ids of the 2x2 cover
-    geom_ref,   # scalar prefetch: (B, 8) int32
-                #   (bx0, by0, bx1, by1, ox, oy, dup_x, dup_y) in level cells
+    geom_ref,   # scalar prefetch: (B, 9) int32
+                #   (bx0, by0, bx1, by1, ox, oy, dup_x, dup_y, live)
+                #   in level cells; live=0 marks a parked (masked-out) lane
     q_ref,      # scalar prefetch: (B, 2) float32 query positions (base px)
     rs_ref,     # scalar prefetch: (B, 2) float32 (radius, 2**level)
     t00, t01, t10, t11,  # (1, T, T, C) int32 tiles (level-scheduled via tid)
@@ -65,6 +66,7 @@ def _kernel(
     oyf = geom_ref[b, 5].astype(jnp.float32)
     dup_x = geom_ref[b, 6] != 0
     dup_y = geom_ref[b, 7] != 0
+    live = geom_ref[b, 8] != 0
     qx = q_ref[b, 0]
     qy = q_ref[b, 1]
     r = rs_ref[b, 0]
@@ -82,7 +84,9 @@ def _kernel(
         + masked_sum(t10, bx1, by0, dup_x)
         + masked_sum(t11, bx1, by1, jnp.logical_or(dup_x, dup_y))
     )
-    out_ref[0, :] = total
+    # parked lanes alias the anchor lane's tiles (their DMAs were elided by
+    # the revisiting rule) — their geometry is stale, so blank the output
+    out_ref[0, :] = jnp.where(live, total, 0)
 
 
 @functools.partial(
@@ -97,12 +101,24 @@ def tile_count_multilevel(
     nblks: tuple[int, ...],  # per-level block counts S_l // T (static)
     metric: str = "l2",
     interpret: bool = True,
+    active: jax.Array | None = None,  # (B,) bool lane mask (None = all live)
 ) -> jax.Array:
     """Level-scheduled circle counts (B, C) in ONE pallas_call.
 
     Equivalent to running tile_count at each query's own level (the stacked
     (L, B, C) select), but each grid program reads only its level's window.
     See grid.flatten_pyramid_tiles for the `tiles` layout.
+
+    `active` masks lanes OUT of the count (converged Eq.-1 lanes whose state
+    is frozen by the caller): live lanes are compacted toward a dense grid
+    prefix (stable argsort on the mask) and every parked lane's prefetched
+    tile ids are aliased to the LAST live lane's — consecutive grid programs
+    whose BlockSpec index_map resolves to the same blocks reuse the already-
+    resident buffers, so the pipeline never re-issues the parked lanes' tile
+    DMAs.  Parked programs write zeros (their `live` geometry flag is 0) and
+    the result is scattered back to caller order, so rows of live lanes are
+    bit-identical to the unmasked call and parked rows are 0.  The grid
+    stays a static (B,) — only the DMA traffic shrinks with convergence.
     """
     nb_total = sum(nb * nb for nb in nblks)
     if tiles.ndim != 4 or tiles.shape[0] != nb_total or tiles.shape[1:3] != (tile, tile):
@@ -144,12 +160,31 @@ def tile_count_multilevel(
         ],
         axis=1,
     ).astype(jnp.int32)
+    live = (
+        jnp.ones((b,), jnp.int32) if active is None
+        else active.astype(jnp.int32)
+    )
     geom = jnp.stack(
         [bx0, by0, bx1, by1, ox, oy,
-         dup_x.astype(jnp.int32), dup_y.astype(jnp.int32)],
+         dup_x.astype(jnp.int32), dup_y.astype(jnp.int32), live],
         axis=1,
     )
     rs = jnp.stack([r, scale], axis=1)
+
+    inv = None
+    if active is None:
+        act = None
+    else:
+        act = active.astype(bool)
+        # compact live lanes to a dense prefix (stable: live lanes keep their
+        # relative order) and alias every parked lane's tile cover to the
+        # last live lane's, so the tail of the grid revisits one resident
+        # block set instead of DMAing per-lane tiles it will discard
+        order = jnp.argsort(jnp.logical_not(act), stable=True)
+        inv = jnp.argsort(order, stable=True)
+        anchor = jnp.maximum(jnp.sum(act.astype(jnp.int32)) - 1, 0)
+        tid, geom, q, rs = tid[order], geom[order], q[order], rs[order]
+        tid = jnp.where(geom[:, 8:9] != 0, tid, tid[anchor][None, :])
 
     def im(t):
         def index_map(i, tid_ref, geom_ref, q_ref, rs_ref):
@@ -164,9 +199,14 @@ def tile_count_multilevel(
         out_specs=pl.BlockSpec((1, c), lambda i, *_: (i, 0)),
     )
     kernel = functools.partial(_kernel, tile=tile, metric=metric)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, c), jnp.int32),
         interpret=interpret,
     )(tid, geom, q, rs, tiles, tiles, tiles, tiles)
+    if act is None:
+        return out
+    # back to caller order; parked rows pinned to 0 (the kernel already
+    # blanked them, the where keeps the contract explicit)
+    return jnp.where(act[:, None], out[inv], 0)

@@ -1,0 +1,318 @@
+"""Per-query adaptive radius schedule + early exit (ISSUE 6).
+
+Three contracts pinned here:
+
+1. EARLY EXIT IS FREE: the masked Eq.-1 loop (converged lanes skip their
+   tile DMAs, post-loop recount touches only fallback lanes) is lane-for-lane
+   BIT-IDENTICAL to the always-on loop — across skewed/uniform/grid-corner
+   densities, both metrics, chunked and unchunked.
+2. ADAPTIVE SEEDING IS A SCHEDULE CHANGE ONLY: `pyramid.seed_radius` starts
+   each lane from its own local-density estimate; the batched path matches
+   the vmapped jnp oracle on every stat, and results still follow whatever
+   radius the schedule converges to.
+3. THE OSCILLATION ESCAPE TERMINATES: a lane stuck with n > k_hi at r == 1
+   (Eq. 1 rounds to 0, the stall-escape decrements into the clip) must run
+   to max_iters with converged=False and a sane best fallback — never spin
+   past the cap or return a zero/negative radius.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as hst
+
+from repro.core import batched
+from repro.core import projection as proj_lib
+from repro.core import pyramid as pyr
+from repro.core.grid import GridConfig, build_index
+from repro.kernels import ops
+
+
+K = 8
+
+
+def _make(points, metric="l2", grid=128, r0=8, k_slack=2.0, n_classes=0,
+          labels=None):
+    pts = jnp.asarray(points, jnp.float32)
+    cfg = GridConfig(grid_size=grid, tile=16, window=48, row_cap=64, r0=r0,
+                     k_slack=k_slack, metric=metric, n_classes=n_classes)
+    proj = proj_lib.identity_projection(pts)
+    return cfg, proj, build_index(pts, cfg, proj, labels=labels)
+
+
+def _densities(rng):
+    """Named point sets spanning the densities the mask must survive:
+    a skewed cluster (most lanes converge at different iterations), a
+    uniform field (lanes converge together), and grid-corner pileups
+    (clamped windows + duplicate cover tiles)."""
+    skewed = np.concatenate([
+        rng.normal(0.0, 0.08, size=(700, 2)),
+        rng.uniform(-3, 3, size=(300, 2)),
+    ])
+    uniform = rng.uniform(-3, 3, size=(1000, 2))
+    corners = np.concatenate([
+        rng.normal([-3, -3], 0.05, size=(400, 2)),
+        rng.normal([3, 3], 0.05, size=(400, 2)),
+        rng.uniform(-3, 3, size=(200, 2)),
+    ])
+    return {"skewed": skewed, "uniform": uniform, "corners": corners}
+
+
+def _stats_equal(a, b, msg=""):
+    for key in ("radius", "count", "iters", "converged"):
+        np.testing.assert_array_equal(
+            np.asarray(a[key]), np.asarray(b[key]), err_msg=f"{msg}:{key}"
+        )
+
+
+# -------------------------------------------------- masked-kernel contract ---
+
+
+def test_masked_kernel_matches_unmasked_rows(rng):
+    """tile_count_multilevel with an `active` mask: live rows bit-identical
+    to the unmasked call, parked rows exactly 0 — random masks plus the
+    all-live / all-parked extremes (the all-parked grid still runs; every
+    program aliases lane 0's tiles and the output is discarded)."""
+    cfg, proj, index = _make(rng.normal(size=(900, 2)))
+    b = 24
+    q = jnp.asarray(rng.uniform(5, cfg.grid_size - 5, size=(b, 2)), jnp.float32)
+    radii = jnp.asarray(rng.integers(1, cfg.max_radius, size=b), jnp.float32)
+    levels = pyr.level_for_radius(radii, cfg)
+    args = (index.pyr_tiles, q, radii, levels, cfg.tile, cfg.level_nblks)
+    base = ops.tile_count_multilevel(*args, metric=cfg.metric)
+    masks = [
+        jnp.asarray(rng.integers(0, 2, size=b).astype(bool)),
+        jnp.ones((b,), bool),
+        jnp.zeros((b,), bool),
+    ]
+    for mask in masks:
+        got = ops.tile_count_multilevel(*args, metric=cfg.metric, active=mask)
+        np.testing.assert_array_equal(
+            np.asarray(got[np.asarray(mask)]),
+            np.asarray(base[np.asarray(mask)]),
+        )
+        assert (np.asarray(got[~np.asarray(mask)]) == 0).all()
+
+
+def test_batched_counts_mask_passthrough(rng):
+    cfg, proj, index = _make(rng.normal(size=(500, 2)))
+    q = jnp.asarray(rng.uniform(10, 100, size=(8, 2)), jnp.float32)
+    radii = jnp.asarray(rng.integers(1, 30, size=8), jnp.int32)
+    mask = jnp.asarray([True, False] * 4)
+    full = batched.batched_counts(index, cfg, q, radii)
+    got = batched.batched_counts(index, cfg, q, radii, active=mask)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(full) * np.asarray(mask)[:, None]
+    )
+
+
+# ------------------------------------------- early-exit loop bit parity ------
+
+
+@pytest.mark.parametrize("metric", ["l2", "l1"])
+@pytest.mark.parametrize("density", ["skewed", "uniform", "corners"])
+def test_early_exit_bit_parity(rng, metric, density):
+    """The tentpole invariant: the masked early-exit loop returns the SAME
+    radius/count/iters/converged, lane for lane, as the always-on loop AND
+    as the vmapped per-query jnp oracle — with and without adaptive seeds."""
+    pts = _densities(rng)[density]
+    cfg, proj, index = _make(pts, metric=metric)
+    q = jnp.asarray(pts[rng.choice(len(pts), 24, replace=False)], jnp.float32)
+    qg = proj_lib.to_grid_coords(proj, q, cfg.grid_size)
+    for adaptive in (False, True):
+        oracle = jax.vmap(
+            lambda g: pyr.radius_search(index, cfg, g, K, adaptive_r0=adaptive)
+        )(qg)
+        masked = batched.radius_search_batched(
+            index, cfg, qg, K, adaptive_r0=adaptive, early_exit=True
+        )
+        legacy = batched.radius_search_batched(
+            index, cfg, qg, K, adaptive_r0=adaptive, early_exit=False
+        )
+        tag = f"{density}/{metric}/adaptive={adaptive}"
+        _stats_equal(masked, oracle, msg=f"{tag}:masked-vs-oracle")
+        _stats_equal(masked, legacy, msg=f"{tag}:masked-vs-legacy")
+        assert int(legacy["tile_dmas_skipped"]) == 0
+        if bool(np.asarray(masked["converged"]).any()):
+            assert int(masked["tile_dmas_skipped"]) > 0, tag
+
+
+def test_early_exit_parity_survives_chunking(rng):
+    """search() with chunk_size slices the batch mid-mask — results must stay
+    bit-identical to the unchunked call (and to the jnp backend)."""
+    from repro.core.active_search import _search_jnp
+
+    pts = _densities(rng)["skewed"]
+    cfg, proj, index = _make(pts)
+    q = jnp.asarray(pts[rng.choice(len(pts), 13, replace=False)], jnp.float32)
+    for adaptive in (False, True):
+        ref = _search_jnp(index, cfg, q, K, "refined", adaptive)
+        full = batched.search(index, cfg, q, K, adaptive_r0=adaptive)
+        chunked = batched.search(index, cfg, q, K, chunk_size=4,
+                                 adaptive_r0=adaptive)
+        for field in ref._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(full, field)),
+                np.asarray(getattr(ref, field)),
+                err_msg=f"full:{field}:adaptive={adaptive}",
+            )
+            np.testing.assert_array_equal(
+                np.asarray(getattr(chunked, field)),
+                np.asarray(getattr(full, field)),
+                err_msg=f"chunked:{field}:adaptive={adaptive}",
+            )
+
+
+def test_sat_counter_ignores_mask_but_keeps_parity(rng):
+    """counter='sat' has no tile DMAs to elide: the loop must not mask (the
+    skip counter stays 0) and still match the jnp oracle exactly."""
+    pts = _densities(rng)["skewed"]
+    pts_j = jnp.asarray(pts, jnp.float32)
+    cfg = GridConfig(grid_size=128, tile=16, window=48, row_cap=64, r0=8,
+                     k_slack=2.0, counter="sat")
+    proj = proj_lib.identity_projection(pts_j)
+    index = build_index(pts_j, cfg, proj)
+    q = jnp.asarray(pts[rng.choice(len(pts), 12, replace=False)], jnp.float32)
+    qg = proj_lib.to_grid_coords(proj, q, cfg.grid_size)
+    oracle = jax.vmap(lambda g: pyr.radius_search(index, cfg, g, K))(qg)
+    got = batched.radius_search_batched(index, cfg, qg, K)
+    _stats_equal(got, oracle, msg="sat")
+    assert int(got["tile_dmas_skipped"]) == 0
+
+
+# --------------------------------------------------------- adaptive seeds ----
+
+
+def test_seed_radius_tracks_local_density(rng):
+    """Dense-region queries must seed tighter than sparse-region queries,
+    every seed stays in [1, max_radius], and an empty pyramid falls back to
+    cfg.r0 — the sketch can only move the START, never break the loop."""
+    pts = np.concatenate([
+        rng.normal(0.0, 0.05, size=(900, 2)),   # dense blob at origin
+        rng.uniform(-3, 3, size=(100, 2)),      # thin background
+    ])
+    cfg, proj, index = _make(pts, r0=64)
+    qg_dense = proj_lib.to_grid_coords(
+        proj, jnp.zeros((1, 2), jnp.float32), cfg.grid_size
+    )[0]
+    qg_sparse = proj_lib.to_grid_coords(
+        proj, jnp.asarray([[2.9, -2.9]], jnp.float32), cfg.grid_size
+    )[0]
+    s_dense = int(pyr.seed_radius(index, cfg, qg_dense, K))
+    s_sparse = int(pyr.seed_radius(index, cfg, qg_sparse, K))
+    assert 1 <= s_dense <= cfg.max_radius
+    assert 1 <= s_sparse <= cfg.max_radius
+    assert s_dense < s_sparse
+    # empty index: no mass anywhere -> global default (projection borrowed
+    # from real points; identity_projection cannot derive extents from 0)
+    cfg_e = GridConfig(grid_size=128, tile=16, window=48, row_cap=64, r0=32,
+                       k_slack=2.0)
+    index_e = build_index(jnp.zeros((0, 2), jnp.float32), cfg_e, proj)
+    assert int(pyr.seed_radius(index_e, cfg_e, qg_dense, K)) == cfg_e.r0
+
+
+def test_adaptive_r0_changes_schedule_not_results(rng):
+    """Refined-mode ids/dists are radius-independent by construction — the
+    adaptive schedule may stop at a different radius/iteration but must
+    return the same neighbors whenever both schedules converge."""
+    pts = _densities(rng)["skewed"]
+    cfg, proj, index = _make(pts)
+    q = jnp.asarray(pts[rng.choice(len(pts), 16, replace=False)], jnp.float32)
+    base = batched.search(index, cfg, q, K)
+    adap = batched.search(index, cfg, q, K, adaptive_r0=True)
+    both = np.asarray(base.converged) & np.asarray(adap.converged)
+    np.testing.assert_array_equal(
+        np.asarray(base.ids)[both], np.asarray(adap.ids)[both]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(base.dists)[both], np.asarray(adap.dists)[both]
+    )
+
+
+# ------------------------------------------- post-loop recount (satellite) ---
+
+
+def test_final_count_reuses_hit_count(rng):
+    """The n_final a converged lane reports must equal a from-scratch count
+    at its final radius (the in-loop capture IS that count); fallback lanes
+    are recounted for real."""
+    pts = _densities(rng)["skewed"]
+    cfg, proj, index = _make(pts)
+    q = jnp.asarray(pts[rng.choice(len(pts), 20, replace=False)], jnp.float32)
+    qg = proj_lib.to_grid_coords(proj, q, cfg.grid_size)
+    st = batched.radius_search_batched(index, cfg, qg, K)
+    recount = batched.batched_counts(
+        index, cfg, qg, st["radius"]
+    ).sum(axis=-1)
+    np.testing.assert_array_equal(
+        np.asarray(st["count"]), np.asarray(recount)
+    )
+
+
+# ------------------------------------------------- oscillation escape --------
+
+
+def _osc_case(n_pts, corner, grid=32):
+    """A pile of identical points at a grid corner: with k=1, k_slack=1.0
+    the count at r=1 is n_pts > k_hi, Eq. 1 rounds the radius to 0, and the
+    stall-escape decrement also clips back to 1 — the loop CANNOT satisfy
+    the band and must terminate at max_iters."""
+    span = 3.0
+    pos = {
+        "ll": (-span, -span), "lr": (-span, span),
+        "ul": (span, -span), "ur": (span, span), "center": (0.0, 0.0),
+    }[corner]
+    pts = np.tile(np.asarray(pos, np.float32), (n_pts, 1))
+    # identity projection needs 2-D extents: add a faint far point so the
+    # grid spans more than the pile itself
+    pts = np.concatenate([pts, np.asarray([[-span, span]], np.float32)])
+    cfg = GridConfig(grid_size=grid, tile=8, window=8, row_cap=n_pts + 8,
+                     r0=2, k_slack=1.0)
+    pts_j = jnp.asarray(pts)
+    proj = proj_lib.identity_projection(pts_j)
+    return cfg, proj, build_index(pts_j, cfg, proj), pts_j
+
+
+@pytest.mark.parametrize("corner", ["ll", "ur", "center"])
+def test_oscillation_escape_terminates(rng, corner):
+    cfg, proj, index, pts = _osc_case(50, corner)
+    qg = proj_lib.to_grid_coords(proj, pts[:1], cfg.grid_size)
+    st = pyr.radius_search(index, cfg, qg[0], 1)
+    assert int(st["iters"]) == cfg.max_iters
+    assert not bool(st["converged"])
+    assert int(st["radius"]) >= 1            # never 0/negative
+    assert int(st["count"]) >= 1             # best fallback still covers k
+    stb = batched.radius_search_batched(index, cfg, qg, 1)
+    _stats_equal(stb, jax.tree.map(lambda a: jnp.asarray(a)[None], st),
+                 msg=corner)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_pts=hst.integers(min_value=2, max_value=300),
+    corner=hst.sampled_from(["ll", "lr", "ul", "ur", "center"]),
+    seed=hst.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_oscillation_escape_property(n_pts, corner, seed):
+    """Across pile sizes and grid corners: the loop always terminates within
+    max_iters, the radius stays in [1, max_radius], a converged lane's count
+    is inside the band, and the masked batched loop agrees lane-for-lane."""
+    cfg, proj, index, pts = _osc_case(n_pts, corner)
+    rng = np.random.default_rng(seed)
+    q = pts[rng.integers(0, len(pts), size=3)]
+    qg = proj_lib.to_grid_coords(proj, q, cfg.grid_size)
+    oracle = jax.vmap(lambda g: pyr.radius_search(index, cfg, g, 1))(qg)
+    got = batched.radius_search_batched(index, cfg, qg, 1)
+    for key in ("radius", "count", "iters", "converged"):
+        np.testing.assert_array_equal(
+            np.asarray(got[key]), np.asarray(oracle[key]), err_msg=key
+        )
+    it = np.asarray(got["iters"])
+    r = np.asarray(got["radius"])
+    cv = np.asarray(got["converged"])
+    n = np.asarray(got["count"])
+    assert (it <= cfg.max_iters).all()
+    assert ((r >= 1) & (r <= cfg.max_radius)).all()
+    assert (n[cv] == 1).all()                 # k_slack=1.0: exact band
+    assert (n[(~cv) & (n > 0)] >= 1).all()    # fallback covers k when it can

@@ -338,6 +338,47 @@ def test_d_chunk_plan_validation(rng):
     assert p.with_plan(backend="pallas_gather").plan.d_chunk == 8  # kept
 
 
+def test_adaptive_r0_plan_validation(rng):
+    """adaptive_r0 is gated like interpret/d_chunk: only backends that run
+    the Eq.-1 radius loop accept it, with_plan backend switches drop the
+    now-illegal knob, and an explicit override still wins."""
+    _, _, s = _searcher(rng, n=300)
+    q = jnp.asarray(rng.normal(size=(2, 2)), jnp.float32)
+    for backend in ("exact", "pallas_stacked"):
+        assert not api.get_backend(backend).supports_adaptive_r0
+        with pytest.raises(ValueError, match="adaptive_r0"):
+            s.with_plan(backend=backend, adaptive_r0=True)._impl("search")
+    for backend in ("jnp", "pallas", "pallas_gather", "sharded"):
+        assert api.get_backend(backend).supports_adaptive_r0, backend
+    p = s.with_plan(backend="pallas", adaptive_r0=True)
+    assert p.search(q, 3).ids.shape == (2, 3)
+    assert p.with_plan(backend="exact").plan.adaptive_r0 is False  # dropped
+    assert p.with_plan(backend="jnp").plan.adaptive_r0 is True     # kept
+    with pytest.raises(ValueError, match="adaptive_r0"):
+        p.with_plan(backend="exact", adaptive_r0=True).search(q, 3)
+
+
+@pytest.mark.parametrize("mode", ["refined", "paper"])
+def test_adaptive_r0_parity_across_backends(rng, mode):
+    """ISSUE-6 acceptance: with adaptive_r0=True every registered backend
+    returns the SAME SearchResult as the jnp oracle — ids/dists AND the
+    Eq.-1 stat fields (radius/count/iters/converged), both modes."""
+    _, _, s = _searcher(rng)
+    q = jnp.asarray(rng.normal(size=(8, 2)), jnp.float32)
+    ref = act._search_jnp(s.index, s.cfg, q, 8, mode, adaptive_r0=True)
+    for backend in ("jnp", "pallas", "pallas_gather"):
+        got = s.with_plan(backend=backend, adaptive_r0=True).search(
+            q, 8, mode=mode
+        )
+        _assert_results_equal(ref, got)
+        np.testing.assert_array_equal(
+            np.asarray(s.with_plan(adaptive_r0=True).classify(q, 8, mode=mode)),
+            np.asarray(s.with_plan(backend=backend, adaptive_r0=True)
+                       .classify(q, 8, mode=mode)),
+            err_msg=backend,
+        )
+
+
 def test_pallas_gather_registered_and_bit_identical(rng):
     """The gather pipeline survives as a full registered backend (search,
     classify, count_at) and matches the fused default bit-for-bit."""

@@ -97,7 +97,28 @@ def test_grid_config_rejects_degenerate_tile(tile):
 
 
 def test_grid_config_accepts_min_tile():
-    assert G.GridConfig(grid_size=64, tile=4).tile == 4
+    # explicit r0: the default (100) exceeds max_radius on a 64-wide grid
+    assert G.GridConfig(grid_size=64, tile=4, r0=8).tile == 4
+
+
+@pytest.mark.parametrize("r0", [0, -1, -100])
+def test_grid_config_rejects_nonpositive_r0(r0):
+    """The radius loop used to jnp.clip a bad r0 silently — a typo'd start
+    radius ran with a DIFFERENT schedule than configured.  Rejected eagerly
+    now, like tile/metric/counter."""
+    with pytest.raises(ValueError, match="r0"):
+        G.GridConfig(grid_size=64, tile=8, r0=r0)
+
+
+def test_grid_config_rejects_r0_beyond_max_radius():
+    cfg_probe = G.GridConfig(grid_size=64, tile=8, r0=8)
+    too_big = cfg_probe.max_radius + 1
+    with pytest.raises(ValueError, match="max_radius"):
+        G.GridConfig(grid_size=64, tile=8, r0=too_big)
+    # the boundary itself is legal: max_radius is countable from the top tile
+    assert G.GridConfig(grid_size=64, tile=8,
+                        r0=cfg_probe.max_radius).r0 == cfg_probe.max_radius
+    assert G.GridConfig(grid_size=64, tile=8, r0=1).r0 == 1
 
 
 def test_flattened_tiles_layout(rng):

@@ -57,6 +57,7 @@ def test_sat_counter_end_to_end(rng):
 
 def test_sat_mass_conservation(rng):
     pts = jnp.asarray(rng.normal(size=(777, 2)), jnp.float32)
-    cfg = GridConfig(grid_size=64, tile=8, window=8, row_cap=16, counter="sat")
+    cfg = GridConfig(grid_size=64, tile=8, window=8, row_cap=16, counter="sat",
+                     r0=8)
     idx = build_index(pts, cfg, identity_projection(pts))
     assert int(idx.sat[-1, -1].sum()) == 777

@@ -101,7 +101,7 @@ def _pyramid_fixture(rng, grid=64, tile=8, c=2):
 
     pts = jnp.asarray(rng.normal(size=(800, 2)), jnp.float32)
     labels = jnp.asarray(rng.integers(0, c, size=800), jnp.int32)
-    cfg = GridConfig(grid_size=grid, tile=tile, n_classes=c)
+    cfg = GridConfig(grid_size=grid, tile=tile, n_classes=c, r0=8)
     idx = build_index(pts, cfg, identity_projection(pts), labels=labels)
     return cfg, idx
 
@@ -266,13 +266,19 @@ def test_csr_candidate_topk_sweep(rng, metric, k):
     np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
 
 
-def test_csr_candidate_topk_paper_mode(rng):
+def test_csr_candidate_topk_paper_mode():
     """center_cells + radii reproduce mode='paper': rank floor(coords)+0.5
-    cell centers and mask candidates outside the Eq.-1 circle."""
-    store, starts, ends, _ = _csr_fixture(rng, d=2)
+    cell centers and mask candidates outside the Eq.-1 circle.
+
+    Local generator, not the session rng: a cell center can land within
+    1 ulp of the circle radius, where the kernel's and the oracle's
+    inclusion masks may flip independently — the drawn geometry must not
+    depend on how many tests consumed the session stream before this one."""
+    local = np.random.default_rng(7)
+    store, starts, ends, _ = _csr_fixture(local, d=2)
     store = store * 8.0  # spread across cells so floor() matters
-    q = jnp.asarray(rng.uniform(-16, 16, size=(5, 2)), jnp.float32)
-    radii = jnp.asarray(rng.uniform(1.0, 12.0, size=(5,)), jnp.float32)
+    q = jnp.asarray(local.uniform(-16, 16, size=(5, 2)), jnp.float32)
+    radii = jnp.asarray(local.uniform(1.0, 12.0, size=(5,)), jnp.float32)
     gd, gi = ops.csr_candidate_topk(
         store, starts, ends, q, 4, store.shape[0], 16, radii=radii,
         center_cells=True, interpret=True,
@@ -281,7 +287,10 @@ def test_csr_candidate_topk_paper_mode(rng):
         store, starts, ends, q, 4, store.shape[0], 16, radii=radii,
         center_cells=True,
     )
-    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+    # distances allclose / indices exact, like the drawn-d sweep: the two
+    # reductions can sit 1 ulp apart (the pinned inter-kernel caveat)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd),
+                               rtol=1e-5, atol=1e-6)
     np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
 
 
@@ -418,7 +427,7 @@ def test_tile_count_full_pyramid_levels(rng):
     from repro.core.projection import identity_projection
 
     pts = jnp.asarray(rng.normal(size=(500, 2)), jnp.float32)
-    cfg = GridConfig(grid_size=64, tile=8)
+    cfg = GridConfig(grid_size=64, tile=8, r0=8)
     idx = build_index(pts, cfg, identity_projection(pts))
     q = jnp.asarray(rng.uniform(0, cfg.padded_size, size=(7, 2)), jnp.float32)
     for lv, arr in enumerate(idx.pyramid):

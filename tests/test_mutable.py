@@ -128,6 +128,13 @@ def test_facade_insert_search_parity_all_backends(rng):
             np.asarray(ref.with_plan(backend=name).classify(q, 8)),
             err_msg=name,
         )
+        if impl.supports_adaptive_r0:
+            # adaptive seeding reads the pyramid's TOP levels, which delta
+            # updates must keep consistent — grown vs rebuilt must agree on
+            # the full adaptive schedule too
+            a = grown.with_plan(backend=name, adaptive_r0=True).search(q, 8)
+            b = ref.with_plan(backend=name, adaptive_r0=True).search(q, 8)
+            _assert_results_equal(a, b, msg=f"{name}:adaptive_r0")
 
 
 def test_facade_delete_then_exact_backend_forgets_points(rng):
