@@ -1,7 +1,7 @@
 """Render the CI perf artifacts (BENCH_kernels.json / BENCH_e2e.json /
-BENCH_mutation.json / BENCH_convergence.json) into the markdown throughput
-table embedded in README.md between the `<!-- BENCH TABLE BEGIN/END -->`
-markers.
+BENCH_mutation.json / BENCH_convergence.json / BENCH_serve.json) into the
+markdown throughput table embedded in README.md between the
+`<!-- BENCH TABLE BEGIN/END -->` markers.
 
   python scripts/render_bench_table.py --artifacts bench-artifacts
   python scripts/render_bench_table.py --artifacts bench-artifacts --check
@@ -99,6 +99,23 @@ def render(art_dir: str) -> str:
         rows.append(f"| convergence | schedule parity vs jnp oracle | "
                     f"{ad['parity_adaptive_vs_jnp_oracle']} |")
 
+    srv = _load(art_dir, "BENCH_serve.json")
+    if srv and "queue" in srv:
+        q = srv["queue"]
+        rows.append(f"| serve | queue latency p50 / p99 | "
+                    f"{q['p50_latency_ms']:,.1f} ms / "
+                    f"{q['p99_latency_ms']:,.1f} ms |")
+        rows.append(f"| serve | queue throughput | {q['qps']:,.1f} q/s "
+                    f"(mean batch {q['mean_batch_rows']:.1f} rows, "
+                    f"pad {q['pad_frac']:.0%}) |")
+        rows.append(f"| serve | insert backlog peak → applied | "
+                    f"{q['insert_backlog_peak']:,} → "
+                    f"{q['inserts_applied']:,} rows |")
+        rows.append(f"| serve | compaction pauses | {q['compactions']} "
+                    f"({q['compact_pause_s']:.3f} s) |")
+        rows.append(f"| serve | queue parity vs direct search | "
+                    f"{q['parity_queue_vs_direct']} |")
+
     if len(rows) == 2:
         rows.append("| (no artifacts found) | — | — |")
     return "\n".join(rows)
@@ -142,6 +159,11 @@ def _parity_problems(art_dir: str) -> list[str]:
         problems.append("BENCH_convergence.json: adaptive r0 did not reduce "
                         "mean Eq.-1 iterations on the skewed-density config "
                         "(mean_iters_reduction <= 0)")
+    srv = _load(art_dir, "BENCH_serve.json")
+    if srv and srv.get("queue", {}).get("parity_queue_vs_direct") is False:
+        problems.append("BENCH_serve.json: dynamic-batching queue results "
+                        "diverged from a direct unpadded search "
+                        "(queue.parity_queue_vs_direct)")
     return problems
 
 

@@ -34,7 +34,6 @@ comparator's `ExactResult` is folded into it with the paper-stat fields
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
 from typing import Any, Callable
 
@@ -131,6 +130,11 @@ class BackendImpl:
     seed it).  `requires_mesh` marks backends that only work on a
     `build_sharded` handle (mesh + axis), so eager validators (e.g. serve's
     CLI check) can reject them up front without name-matching.
+    `supports_mutation` gates the facade's insert/delete/snapshot mutation
+    ops (core/mutable.py deltas on dense handles, distributed.py cell-routed
+    deltas on sharded ones): backends that can serve the refreshed snapshot
+    declare True; count-only baselines opt out, and eager validators
+    (`serve.py --knn-online`) reject them by capability, not name.
     """
 
     search: Callable[..., SearchResult] | None = None
@@ -139,6 +143,7 @@ class BackendImpl:
     supports_interpret: bool = False
     supports_d_chunk: bool = False
     supports_adaptive_r0: bool = False
+    supports_mutation: bool = False
     requires_mesh: bool = False
     description: str = ""
 
@@ -239,6 +244,7 @@ class ActiveSearcher:
         mesh: Any,
         axis: str,
         labels: jax.Array | None = None,
+        ids: jax.Array | None = None,
         cfg: GridConfig | None = None,
         plan: ExecutionPlan | None = None,
         proj: proj_lib.Projection | None = None,
@@ -250,7 +256,8 @@ class ActiveSearcher:
         cfg = cfg or GridConfig()
         if proj is None:
             proj = proj_lib.pca_projection(points, grid_dim=2)
-        index = dist.build_sharded_index(points, cfg, proj, mesh, axis, labels)
+        index = dist.build_sharded_index(
+            points, cfg, proj, mesh, axis, labels, ids=ids)
         plan = dataclasses.replace(plan or ExecutionPlan(), backend="sharded")
         return cls(index=index, cfg=cfg, plan=plan, mesh=mesh, axis=axis)
 
@@ -280,18 +287,46 @@ class ActiveSearcher:
         return dataclasses.replace(self, plan=new)
 
     # ------------------------------------------------------------- mutation --
+    def _check_mutation(self) -> None:
+        """Eager capability validation: the plan's backend must be able to
+        serve the refreshed snapshot a mutation produces."""
+        impl = get_backend(self.plan.backend)
+        if not impl.supports_mutation:
+            mutable_backends = [
+                n for n in registered_backends()
+                if get_backend(n).supports_mutation
+            ]
+            raise ValueError(
+                f"backend {self.plan.backend!r} does not support mutation "
+                f"(BackendImpl.supports_mutation); insert/delete need one "
+                f"of {mutable_backends}"
+            )
+
     def _mutable_state(self):
-        """Current mutation state, opening the dense index on first use."""
+        """Current mutation state, opening the index on first use (per-shard
+        MutableIndex states for sharded handles, one state for dense)."""
         from repro.core import mutable as mut
 
-        if self.mesh is not None:
-            raise NotImplementedError(
-                "insert/delete on a sharded handle is not supported yet; "
-                "mutate per-shard indexes and re-merge with build_sharded"
-            )
         if self.mutable is not None:
             return self.mutable
+        if self.mesh is not None:
+            from repro.core import distributed as dist
+
+            return dist.open_sharded(self.index, self.cfg)
         return mut.from_index(self.index, self.cfg)
+
+    def _carry_mutation_stats(self, new, compactions: int, compact_s: float):
+        """Accumulate dense-path compaction accounting on the NEW handle
+        (same __dict__ side-channel as the exact-order memo; sharded handles
+        carry theirs inside ShardedMutable instead)."""
+        prev = self.__dict__.get(
+            "_mutation_stats", {"compactions": 0, "compact_s": 0.0}
+        )
+        object.__setattr__(new, "_mutation_stats", {
+            "compactions": prev["compactions"] + compactions,
+            "compact_s": prev["compact_s"] + compact_s,
+        })
+        return new
 
     def insert(
         self,
@@ -310,23 +345,53 @@ class ActiveSearcher:
         re-derives its original-order view over the grown contents instead of
         serving stale memoized arrays.  Results are bit-identical to
         rebuilding from the union of the points (tests/test_mutable.py).
+
+        Sharded handles route every point to its owning shard (grid-cell
+        ownership, core/distributed.py) and delta-insert per shard; the same
+        insert == rebuild bit-parity holds on the "sharded" backend
+        (tests/test_sharded_mutable.py).
         """
         from repro.core import mutable as mut
 
-        state = mut.insert(self._mutable_state(), self.cfg, points,
-                           labels=labels, ids=ids)
-        return dataclasses.replace(
+        self._check_mutation()
+        state = self._mutable_state()
+        if self.mesh is not None:
+            from repro.core import distributed as dist
+
+            state = dist.sharded_insert(state, self.cfg, points,
+                                        labels=labels, ids=ids)
+            index = dist.stacked_snapshot(state, self.cfg, self.mesh,
+                                          self.axis)
+            return dataclasses.replace(self, index=index, mutable=state)
+        state, report = mut.insert_tracked(state, self.cfg, points,
+                                           labels=labels, ids=ids)
+        new = dataclasses.replace(
             self, index=mut.snapshot(state, self.cfg), mutable=state
+        )
+        return self._carry_mutation_stats(
+            new, report.compactions, report.compact_s
         )
 
     def delete(self, ids: jax.Array) -> "ActiveSearcher":
-        """Delete by global point id; returns a NEW handle (see `insert`)."""
+        """Delete by global point id; returns a NEW handle (see `insert`).
+        On sharded handles the ids are matched globally (strict accounting
+        across shards) and tombstoned on whichever shards carry them."""
         from repro.core import mutable as mut
 
-        state = mut.delete(self._mutable_state(), self.cfg, ids)
-        return dataclasses.replace(
+        self._check_mutation()
+        state = self._mutable_state()
+        if self.mesh is not None:
+            from repro.core import distributed as dist
+
+            state = dist.sharded_delete(state, self.cfg, ids)
+            index = dist.stacked_snapshot(state, self.cfg, self.mesh,
+                                          self.axis)
+            return dataclasses.replace(self, index=index, mutable=state)
+        state = mut.delete(state, self.cfg, ids)
+        new = dataclasses.replace(
             self, index=mut.snapshot(state, self.cfg), mutable=state
         )
+        return self._carry_mutation_stats(new, 0, 0.0)
 
     def snapshot(self) -> "ActiveSearcher":
         """A frozen handle over the current contents.
@@ -334,8 +399,22 @@ class ActiveSearcher:
         Drops the slack state: later insert/delete on either handle cannot
         affect the other (delta updates build NEW arrays — jax arrays are
         immutable — so a snapshot taken mid-serving stays valid while the
-        source keeps mutating)."""
-        return dataclasses.replace(self, mutable=None)
+        source keeps mutating).
+
+        On a SHARDED handle this also merges the per-shard stores into ONE
+        dense handle (plan switched to the "jnp" backend, mesh dropped)
+        whose index is bit-identical to an unsharded `build_index` over the
+        same points — cells are wholly shard-owned, so the merge reproduces
+        the global CSR order exactly (distributed.merge_to_dense)."""
+        if self.mesh is None:
+            return dataclasses.replace(self, mutable=None)
+        from repro.core import distributed as dist
+
+        dense = dist.merge_to_dense(self.index, self.cfg)
+        out = self.with_plan(backend="jnp")
+        return dataclasses.replace(
+            out, index=dense, mesh=None, axis=None, mutable=None
+        )
 
     # ------------------------------------------------------------- dispatch --
     def _impl(self, op: str) -> Callable:
@@ -427,11 +506,26 @@ class ActiveSearcher:
             for a in (idx.points_sorted, idx.coords_sorted,
                       idx.labels_sorted, idx.ids_sorted, idx.offsets)
         )
+        if self.mutable is None:
+            mutation_stats = {}
+        elif self.mesh is not None:
+            from repro.core import distributed as dist
+
+            mutation_stats = dist.sharded_stats(self.mutable)
+        else:
+            mutation_stats = {
+                "free_bucket_slots": int(self.mutable.free_bucket_slots),
+                "spill_used": int(self.mutable.spill_used),
+                "spill_capacity": self.mutable.spill_capacity,
+                **self.__dict__.get(
+                    "_mutation_stats", {"compactions": 0, "compact_s": 0.0}
+                ),
+            }
         return {
-            # sharded handles carry a leading shard axis on every leaf —
-            # fold it in so n_points is the GLOBAL datastore size, matching
-            # the byte totals below
-            "n_points": int(math.prod(idx.points_sorted.shape[:-1])),
+            # LIVE record count from the CSR offsets: dense handles end at
+            # offsets[-1] == N, sharded handles sum per-shard live prefixes
+            # — the stacked layout's pow2 pad rows must NOT count
+            "n_points": int(jnp.sum(idx.offsets[..., -1])),
             "dim": int(idx.points_sorted.shape[-1]),
             "grid_size": cfg.grid_size,
             "padded_size": cfg.padded_size,
@@ -446,14 +540,7 @@ class ActiveSearcher:
             "pyr_tiles_bytes": int(tile_bytes),
             "csr_bytes": int(csr_bytes),
             "mutable": self.mutable is not None,
-            **(
-                {
-                    "free_bucket_slots": int(self.mutable.free_bucket_slots),
-                    "spill_used": int(self.mutable.spill_used),
-                    "spill_capacity": self.mutable.spill_capacity,
-                }
-                if self.mutable is not None else {}
-            ),
+            **mutation_stats,
         }
 
 
@@ -615,13 +702,14 @@ def _sharded_classify(s: ActiveSearcher, queries, k, mode):
 
 register_backend("jnp", BackendImpl(
     search=_jnp_search, classify=_jnp_classify, count_at=_jnp_count_at,
-    supports_adaptive_r0=True,
+    supports_adaptive_r0=True, supports_mutation=True,
     description="per-query reference pipeline under jax.vmap (pure lax/jnp)",
 ))
 register_backend("pallas", BackendImpl(
     search=_pallas_search, classify=_pallas_classify,
     count_at=_pallas_count_at, supports_interpret=True,
     supports_d_chunk=True, supports_adaptive_r0=True,
+    supports_mutation=True,
     description="batched kernel pipeline: level-scheduled "
                 "tile_count_multilevel + FUSED csr_candidate_topk (candidate "
                 "rows DMA'd straight from the CSR store; no (B, w*row_cap) "
@@ -631,6 +719,7 @@ register_backend("pallas_gather", BackendImpl(
     search=_pallas_gather_search, classify=_pallas_gather_classify,
     count_at=_pallas_count_at, supports_interpret=True,
     supports_d_chunk=True, supports_adaptive_r0=True,
+    supports_mutation=True,
     description="benchmark baseline / second oracle: same counting, but the "
                 "candidate stage is the PR-1..4 one-shot (B, w*row_cap) "
                 "four-field gather + dense candidate_topk",
@@ -641,15 +730,16 @@ register_backend("pallas_stacked", BackendImpl(
                 "tile_count stack + select",
 ))
 register_backend("exact", BackendImpl(
-    search=_exact_search, classify=_exact_classify,
+    search=_exact_search, classify=_exact_classify, supports_mutation=True,
     description="blocked brute-force kNN — the paper's 'original kNN' "
                 "comparator (core/exact.py)",
 ))
 register_backend("sharded", BackendImpl(
     search=_sharded_search, classify=_sharded_classify, requires_mesh=True,
-    supports_adaptive_r0=True,
-    description="per-shard searchers under shard_map + all_gather top-k "
-                "merge (core/distributed.py; build via build_sharded)",
+    supports_adaptive_r0=True, supports_mutation=True,
+    description="per-shard searchers under shard_map + (dist, global id) "
+                "lexicographic top-k merge; mutation routed by grid-cell "
+                "ownership (core/distributed.py; build via build_sharded)",
 ))
 
 

@@ -40,6 +40,7 @@ persists the state via `state_to_tree`/`state_from_tree`.
 
 from __future__ import annotations
 
+import time
 from functools import partial
 from typing import NamedTuple
 
@@ -452,6 +453,48 @@ def insert(
     return out._replace(pyr_tiles=tiles)
 
 
+class InsertReport(NamedTuple):
+    """What `insert_tracked` did BESIDES the insert: overflow compactions and
+    the wall-clock pause they cost — the serving tier's backpressure signal
+    (BENCH_serve.json reports both)."""
+
+    compactions: int
+    compact_s: float
+
+
+def insert_tracked(
+    m: MutableIndex,
+    cfg: GridConfig,
+    points: jax.Array,
+    labels: jax.Array | None = None,
+    ids: jax.Array | None = None,
+) -> tuple[MutableIndex, InsertReport]:
+    """`insert` with EXPLICIT, shard-local overflow handling.
+
+    On `BucketOverflow` this compacts THIS state only and retries — in a
+    sharded tier (core/distributed.py) sibling shards keep their exact state
+    objects, so one full shard never stalls the others.  The retry's spill
+    capacity covers the whole batch (same rule as `insert`'s internal escape
+    hatch), so it cannot overflow again.  Returns (new_state, report); the
+    report carries the compaction count (0 or 1) and the blocking pause in
+    seconds."""
+    try:
+        out = insert(m, cfg, points, labels=labels, ids=ids,
+                     on_overflow="raise")
+        return out, InsertReport(compactions=0, compact_s=0.0)
+    except BucketOverflow:
+        t0 = time.perf_counter()
+        mn = int(jnp.asarray(points).shape[0])
+        grow = max(2 * m.spill_capacity, mn)
+        packed = compact(m, cfg, spill_capacity=grow)
+        out = insert(packed, cfg, points, labels=labels, ids=ids,
+                     on_overflow="raise")
+        jax.block_until_ready(out.base.ids)
+        return out, InsertReport(
+            compactions=1, compact_s=time.perf_counter() - t0
+        )
+
+
 # ----------------------------------------------------------------- delete ----
 
 
@@ -512,6 +555,20 @@ def _plan_delete(m: MutableIndex, ids):
     in_spill = jnp.arange(m.spill.ids.shape[0]) < m.spill_used
     kill_spill = jnp.isin(m.spill.ids, ids) & m.spill.live & in_spill
     return kill_base, kill_spill
+
+
+@jax.jit
+def ids_live_mask(m: MutableIndex, ids: jax.Array) -> jax.Array:
+    """(len(ids),) bool — which of `ids` name at least one LIVE record here.
+
+    The sharded delete router (distributed.sharded_delete) asks every shard
+    this question to do GLOBAL strict accounting before issuing per-shard
+    lenient deletes.  Dead/free slots are masked to -2 (never a caller id;
+    -1 is the free-slot sentinel a caller could conceivably pass)."""
+    base_ids = jnp.where(m.base.live, m.base.ids, -2)
+    in_spill = jnp.arange(m.spill.ids.shape[0]) < m.spill_used
+    spill_ids = jnp.where(m.spill.live & in_spill, m.spill.ids, -2)
+    return jnp.isin(ids, base_ids) | jnp.isin(ids, spill_ids)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

@@ -16,8 +16,10 @@ over a corpus.  Engine throughput/latency stats feed benchmarks/.
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
 import time
+from concurrent.futures import Future
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +43,148 @@ class ServeConfig:
     seed: int = 0
 
 
+def _pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+class DynamicBatcher:
+    """Async request queue with dynamic batching over one `ActiveSearcher`.
+
+    Requests (`submit`) are coalesced into batches padded up to the next
+    power of two — the SAME pow2 ladder the jitted cores already compile
+    for (core/mutable.py pads insert batches identically), so a ragged
+    request stream hits a handful of cached executables instead of one
+    retrace per batch size.  Pad rows replicate the last real query and are
+    sliced off before a request's future resolves: results are bit-identical
+    to an unpadded call (tests/test_padding.py) and pads never leak into the
+    queue's truncation stats.
+
+    `offer_insert` queues `--knn-online` datastore growth instead of
+    applying it inline; the backlog drains BETWEEN search batches (`step`
+    alternates: one search batch, then any queued inserts), so a decode
+    stream never waits on an insert mid-batch, and compaction pauses land
+    on the batch boundary.  `stats` tracks the backlog depth, pad overhead,
+    per-request latency, and the searcher's own compaction accounting.
+    """
+
+    def __init__(self, searcher, k: int, max_batch: int = 64):
+        if max_batch <= 0:
+            raise ValueError(f"max_batch must be positive, got {max_batch}")
+        self.searcher = searcher
+        self.k = k
+        self.max_batch = max_batch
+        self._requests: collections.deque = collections.deque()
+        self._inserts: collections.deque = collections.deque()
+        self._after_search = False  # drain inserts before the next batch
+        self.stats = {
+            "requests": 0, "request_rows": 0, "batches": 0, "batch_rows": 0,
+            "pad_rows": 0, "truncated_rows": 0, "insert_rows_queued": 0,
+            "insert_backlog": 0, "insert_backlog_peak": 0,
+            "inserts_applied": 0, "latencies_s": [],
+        }
+
+    # ------------------------------------------------------------- enqueue --
+    def submit(self, queries, op: str = "search") -> Future:
+        """Queue a (Q, d) request; the future resolves to a `SearchResult`
+        (op="search") or (Q,) predictions (op="classify") for exactly the
+        submitted rows."""
+        if op not in ("search", "classify"):
+            raise ValueError(f"op must be 'search' or 'classify', got {op!r}")
+        q = np.asarray(queries)
+        if q.ndim != 2 or q.shape[0] == 0:
+            raise ValueError(f"queries must be (Q>0, d), got {q.shape}")
+        fut: Future = Future()
+        self._requests.append((op, q, fut, time.perf_counter()))
+        self.stats["requests"] += 1
+        self.stats["request_rows"] += q.shape[0]
+        return fut
+
+    def offer_insert(self, points, labels=None, ids=None) -> int:
+        """Queue datastore growth; applied between search batches (or by
+        `drain`).  Returns the current insert backlog depth in rows."""
+        self._inserts.append((points, labels, ids))
+        self.stats["insert_rows_queued"] += int(points.shape[0])
+        backlog = sum(int(p.shape[0]) for p, _, _ in self._inserts)
+        self.stats["insert_backlog"] = backlog
+        self.stats["insert_backlog_peak"] = max(
+            self.stats["insert_backlog_peak"], backlog
+        )
+        return backlog
+
+    # -------------------------------------------------------------- serve ---
+    def step(self) -> bool:
+        """Run ONE unit of work: the insert backlog if a search batch just
+        ran (or nothing else is queued), else one dynamic search batch.
+        Returns False when both queues are empty."""
+        if self._inserts and (self._after_search or not self._requests):
+            self._apply_inserts()
+            self._after_search = False
+            return True
+        if not self._requests:
+            return False
+        self._run_batch()
+        self._after_search = True
+        return True
+
+    def drain(self) -> None:
+        """Serve until both the request and insert queues are empty."""
+        while self.step():
+            pass
+
+    async def run_async(self, poll_s: float = 0.001) -> None:
+        """Cooperative serving loop for an asyncio host: steps whenever work
+        is queued, yields to the event loop when idle.  Cancel to stop."""
+        import asyncio
+
+        while True:
+            if not self.step():
+                await asyncio.sleep(poll_s)
+
+    # ------------------------------------------------------------ internals -
+    def _apply_inserts(self) -> None:
+        rows = 0
+        while self._inserts:
+            pts, labels, ids = self._inserts.popleft()
+            self.searcher = self.searcher.insert(pts, labels=labels, ids=ids)
+            rows += int(pts.shape[0])
+        self.stats["inserts_applied"] += rows
+        self.stats["insert_backlog"] = 0
+
+    def _run_batch(self) -> None:
+        op = self._requests[0][0]
+        batch, rows = [], 0
+        while (self._requests and self._requests[0][0] == op
+               and rows < self.max_batch):
+            batch.append(self._requests.popleft())
+            rows += batch[-1][1].shape[0]
+        qs = np.concatenate([b[1] for b in batch], axis=0)
+        n = qs.shape[0]
+        pad = _pow2(n) - n
+        if pad:
+            qs = np.concatenate([qs, np.repeat(qs[-1:], pad, axis=0)], axis=0)
+        qj = jnp.asarray(qs, jnp.float32)
+        if op == "search":
+            out = self.searcher.search(qj, self.k)
+            self.stats["truncated_rows"] += int(
+                np.asarray(out.truncated[:n]).sum()
+            )
+        else:
+            out = self.searcher.classify(qj, self.k)
+        t_done = time.perf_counter()
+        ofs = 0
+        for _, q, fut, t0 in batch:
+            m = q.shape[0]
+            if op == "search":
+                fut.set_result(jax.tree.map(lambda a: a[ofs:ofs + m], out))
+            else:
+                fut.set_result(out[ofs:ofs + m])
+            ofs += m
+            self.stats["latencies_s"].append(t_done - t0)
+        self.stats["batches"] += 1
+        self.stats["batch_rows"] += n
+        self.stats["pad_rows"] += pad
+
+
 class Engine:
     """Batched generation over a fixed mesh; caches donated step to step."""
 
@@ -55,10 +199,10 @@ class Engine:
             cfg, mesh
         )
         self._compiled = {}
-        # slack state for --knn-online growth: opened on the first
-        # extend_datastore and kept across batches, so chained inserts hit
-        # free bucket slots instead of re-deriving the layout every time
-        self._ds_state = None
+        # --knn-online growth queue: opened on first use and kept across
+        # batches, so chained inserts reuse the searcher's slack state (free
+        # bucket slots) instead of re-deriving the layout every time
+        self._ds_queue: DynamicBatcher | None = None
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
 
     def _decode_fn(self, caches, token, pos):
@@ -111,29 +255,53 @@ class Engine:
         toks = jnp.stack(out_tokens, axis=1)
         return np.asarray(toks), out_hidden
 
-    def extend_datastore(self, hiddens, tokens) -> int:
-        """Grow the kNN-LM datastore ONLINE from this engine's own decode
+    def datastore_queue(self) -> DynamicBatcher:
+        """The engine's dynamic-batching queue over the kNN-LM datastore,
+        opened on first use.  Its searcher owns the datastore's slack state
+        across batches; `drain_datastore` republishes the grown snapshot."""
+        if self.datastore is None or self.sc.knn is None:
+            raise ValueError("datastore_queue needs a kNN-LM datastore")
+        if self._ds_queue is None:
+            searcher = api.ActiveSearcher.from_index(
+                self.datastore, self.sc.knn.grid, plan=self.sc.knn.plan
+            )
+            self._ds_queue = DynamicBatcher(searcher, k=self.sc.knn.k)
+        return self._ds_queue
+
+    def queue_datastore_pairs(self, hiddens, tokens) -> int:
+        """Queue ONLINE datastore growth from this engine's own decode
         stream: `hiddens` is the per-step hidden list from `generate`,
         `tokens` the (B, new) emitted tokens.  Pairs (h_t -> token_{t+1})
-        are delta-inserted (core/mutable.py via knn_lm.extend_datastore) —
-        no rebuild, no PCA re-fit — and the next `generate` call searches
-        the grown datastore.  Returns the number of pairs added."""
-        from repro.core import mutable as mut
-
-        if self.datastore is None or self.sc.knn is None:
-            raise ValueError("extend_datastore needs a kNN-LM datastore")
+        enter the insert backlog (applied between search batches — see
+        DynamicBatcher); returns the number of pairs queued."""
         if not hiddens:
             return 0
         keys = jnp.concatenate(
             [h.astype(jnp.float32) for h in hiddens], axis=0
         )  # (B*(new-1), d)
         vals = jnp.asarray(tokens[:, 1:], jnp.int32).T.reshape(-1)
-        grid = self.sc.knn.grid
-        if self._ds_state is None:
-            self._ds_state = mut.from_index(self.datastore, grid)
-        self._ds_state = mut.insert(self._ds_state, grid, keys, labels=vals)
-        self.datastore = mut.snapshot(self._ds_state, grid)
+        self.datastore_queue().offer_insert(keys, labels=vals)
         return int(keys.shape[0])
+
+    def drain_datastore(self) -> int:
+        """Apply the queued inserts (core/mutable.py deltas — no rebuild,
+        no PCA re-fit) and publish the grown datastore so the next
+        `generate` call searches it.  Returns the rows applied."""
+        if self._ds_queue is None:
+            return 0
+        before = self._ds_queue.stats["inserts_applied"]
+        self._ds_queue.drain()
+        self.datastore = self._ds_queue.searcher.index
+        return self._ds_queue.stats["inserts_applied"] - before
+
+    def extend_datastore(self, hiddens, tokens) -> int:
+        """Synchronous grow: queue the decode stream's pairs and drain at
+        once.  Returns the number of pairs added."""
+        if self.datastore is None or self.sc.knn is None:
+            raise ValueError("extend_datastore needs a kNN-LM datastore")
+        added = self.queue_datastore_pairs(hiddens, tokens)
+        self.drain_datastore()
+        return added
 
     def _pick(self, lm_logits, hidden, key, step):
         if self.datastore is not None and self.sc.knn is not None:
@@ -225,6 +393,17 @@ def main() -> None:
                 f"--knn-backend {args.knn_backend!r} cannot serve datastore "
                 f"searches; pick one of {searchable}"
             )
+        if args.knn_online and not impl.supports_mutation:
+            # capability-driven, not name-matched: online growth needs a
+            # backend that can serve the refreshed post-insert snapshot
+            mutable = [n for n in api.registered_backends()
+                       if api.get_backend(n).supports_mutation
+                       and not api.get_backend(n).requires_mesh]
+            raise SystemExit(
+                f"--knn-online: backend {args.knn_backend!r} does not "
+                f"support mutation (BackendImpl.supports_mutation); pick "
+                f"one of {mutable}"
+            )
 
     cfg = get_smoke(args.arch)
     mesh = make_host_mesh(1, 1)
@@ -249,7 +428,11 @@ def main() -> None:
                            dtype=np.int32)
     toks, hiddens = engine.generate(prompts, args.max_new)
     if args.knn_online:
-        added = engine.extend_datastore(hiddens, toks)
+        added = engine.queue_datastore_pairs(hiddens, toks)
+        q = engine.datastore_queue()
+        print(f"[serve] insert backlog: {q.stats['insert_backlog']} rows "
+              f"(peak {q.stats['insert_backlog_peak']})")
+        engine.drain_datastore()
         print(f"[serve] datastore grew online: +{added} pairs -> "
               f"{engine.datastore.n_points} keys (no rebuild)")
         prompts2 = rng.integers(

@@ -425,3 +425,38 @@ def test_from_index_upgrades_pre_layout_tiles(rng):
             stripped, s.cfg, jnp.zeros((1, 2), jnp.float32),
             jnp.ones((1,), jnp.int32),
         )
+
+
+# ------------------------------------------------------ mutation capability --
+
+
+def test_supports_mutation_capability_flags():
+    """Every backend that can serve a refreshed post-mutation snapshot
+    declares supports_mutation; the count-only baseline does not."""
+    for name in ("jnp", "pallas", "pallas_gather", "exact", "sharded"):
+        assert api.get_backend(name).supports_mutation, name
+    assert not api.get_backend("pallas_stacked").supports_mutation
+
+
+def test_serve_knn_online_rejects_non_mutation_backend(monkeypatch):
+    """serve.py --knn-online validates by CAPABILITY before model init: a
+    searchable backend without supports_mutation exits naming the flag and
+    the capable alternatives — no name-matching, no late failure."""
+    from repro.core import engine
+    from repro.launch import serve
+
+    api.register_backend(
+        "searchonly-test",
+        api.BackendImpl(search=lambda *a, **k: None),
+    )
+    try:
+        monkeypatch.setattr(
+            "sys.argv",
+            ["serve", "--knn", "--knn-online",
+             "--knn-backend", "searchonly-test"],
+        )
+        with pytest.raises(SystemExit, match="supports_mutation") as e:
+            serve.main()
+        assert "jnp" in str(e.value)  # the fix is in the message
+    finally:
+        engine._REGISTRY.pop("searchonly-test", None)

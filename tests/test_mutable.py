@@ -104,7 +104,11 @@ def test_interleaved_insert_delete_parity(rng):
 def test_facade_insert_search_parity_all_backends(rng):
     """The acceptance invariant: build(P1).insert(P2).search(Q) equals
     build(P1 u P2).search(Q) — ids, distances, AND the Eq.-1 stat fields —
-    for every registered backend that can search a single-host handle."""
+    for EVERY registered backend that can search.  Mesh-requiring backends
+    (sharded) run the same matrix on build_sharded handles over however
+    many devices the process sees (8 under the CI multi-device job)."""
+    from repro.core import distributed as D
+
     pts, labels = _data(rng, 1200)
     proj = identity_projection(pts)
     n1 = 900
@@ -116,24 +120,36 @@ def test_facade_insert_search_parity_all_backends(rng):
         build_index(pts, CFG, proj, labels=labels), CFG
     )
     q = jnp.asarray(rng.normal(size=(16, 2)), jnp.float32)
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("data",))
+    sh_grown = api.ActiveSearcher.build_sharded(
+        pts[:n1], mesh=mesh, axis="data", labels=labels[:n1], cfg=CFG,
+        proj=proj,
+    ).insert(pts[n1:], labels=labels[n1:])
+    sh_ref = api.ActiveSearcher.build_sharded(
+        pts, mesh=mesh, axis="data", labels=labels, cfg=CFG, proj=proj)
     for name in api.registered_backends():
         impl = api.get_backend(name)
-        if impl.search is None or impl.requires_mesh:
+        if impl.search is None:
             continue
-        a = grown.with_plan(backend=name).search(q, 8)
-        b = ref.with_plan(backend=name).search(q, 8)
-        _assert_results_equal(a, b, msg=name)
+        if impl.requires_mesh:
+            a_h, b_h = sh_grown.with_plan(backend=name), \
+                sh_ref.with_plan(backend=name)
+            qq = D.replicate_queries(q, mesh)
+        else:
+            a_h, b_h, qq = grown.with_plan(backend=name), \
+                ref.with_plan(backend=name), q
+        _assert_results_equal(a_h.search(qq, 8), b_h.search(qq, 8), msg=name)
         np.testing.assert_array_equal(
-            np.asarray(grown.with_plan(backend=name).classify(q, 8)),
-            np.asarray(ref.with_plan(backend=name).classify(q, 8)),
+            np.asarray(a_h.classify(qq, 8)),
+            np.asarray(b_h.classify(qq, 8)),
             err_msg=name,
         )
         if impl.supports_adaptive_r0:
             # adaptive seeding reads the pyramid's TOP levels, which delta
             # updates must keep consistent — grown vs rebuilt must agree on
             # the full adaptive schedule too
-            a = grown.with_plan(backend=name, adaptive_r0=True).search(q, 8)
-            b = ref.with_plan(backend=name, adaptive_r0=True).search(q, 8)
+            a = a_h.with_plan(backend=name, adaptive_r0=True).search(qq, 8)
+            b = b_h.with_plan(backend=name, adaptive_r0=True).search(qq, 8)
             _assert_results_equal(a, b, msg=f"{name}:adaptive_r0")
 
 
@@ -402,13 +418,42 @@ def test_mutable_with_sat_counter(rng):
     assert snap.pyr_tiles is None
 
 
-def test_sharded_handle_rejects_mutation(rng):
-    pts, _ = _data(rng, 64)
-    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
-    s = api.ActiveSearcher.build_sharded(
-        pts, mesh=mesh, axis="data",
-        cfg=GridConfig(grid_size=32, tile=8, window=8, row_cap=16, r0=4),
-        proj=identity_projection(pts),
-    )
-    with pytest.raises(NotImplementedError, match="sharded"):
+def test_mutation_rejected_by_capability_not_name(rng):
+    """Eager validation is capability-driven: a backend registered WITHOUT
+    `supports_mutation` rejects insert/delete with the capability named in
+    the message, before any state is opened — same PR-3 style as the
+    interpret/d_chunk plan validation."""
+    pts, labels = _data(rng, 64)
+    cfg = GridConfig(grid_size=32, tile=8, window=8, row_cap=16, r0=4)
+    s = api.ActiveSearcher.from_index(
+        build_index(pts, cfg, identity_projection(pts), labels=labels), cfg
+    ).with_plan(backend="pallas_stacked")
+    assert not api.get_backend("pallas_stacked").supports_mutation
+    with pytest.raises(ValueError, match="supports_mutation"):
         s.insert(pts[:2])
+    with pytest.raises(ValueError, match="supports_mutation"):
+        s.delete(jnp.asarray([0], jnp.int32))
+    # the error lists the capable backends, so the fix is in the message
+    with pytest.raises(ValueError, match="sharded"):
+        s.insert(pts[:2])
+
+
+def test_sharded_merge_tiebreak_pinned_to_global_id(rng):
+    """Regression pin for the global top-k merge: distance ties order by
+    GLOBAL id (lax.sort num_keys=2), not by shard/CSR position — the full
+    multi-shard version lives in tests/test_sharded_mutable.py."""
+    cfg = GridConfig(grid_size=32, tile=8, window=16, row_cap=16, r0=4)
+    pts = jnp.asarray([[0.5, 0.0], [-0.5, 0.0], [4.0, 4.0], [-4.0, -4.0]],
+                      jnp.float32)
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("data",))
+    s = api.ActiveSearcher.build_sharded(
+        pts, mesh=mesh, axis="data", cfg=cfg,
+        proj=identity_projection(pts),
+        ids=jnp.asarray([3, 7, 11, 12], jnp.int32),  # CSR order is 7 then 3
+    )
+    from repro.core import distributed as D
+
+    res = s.search(D.replicate_queries(jnp.zeros((1, 2), jnp.float32), mesh), 2)
+    d = np.asarray(res.dists[0])
+    assert d[0] == d[1], d
+    np.testing.assert_array_equal(np.asarray(res.ids[0]), [3, 7])

@@ -100,3 +100,134 @@ def test_padded_train_loss_finite_and_decreasing(rng, key):
         params, opt, loss = step(params, opt)
         losses.append(float(loss))
     assert all(np.isfinite(losses)) and losses[-1] < losses[0]
+
+
+# ------------------------------------------------ dynamic batching queue -----
+# The serving tier's pow2 padding (launch/serve.py DynamicBatcher) obeys the
+# same invariant as the head/vocab pads above: pad rows are dead weight.
+# Queue-padded search/classify results must be bit-identical to unpadded
+# single-request calls for every ragged size, and pads never leak into
+# results or the queue's truncation stats.
+
+from repro import api  # noqa: E402
+from repro.core.grid import GridConfig, build_index  # noqa: E402
+from repro.core.projection import identity_projection  # noqa: E402
+from repro.launch.serve import DynamicBatcher, _pow2  # noqa: E402
+
+QCFG = GridConfig(grid_size=64, tile=8, n_classes=3, window=16, row_cap=8,
+                  r0=4, k_slack=2.0)
+
+
+def _searcher(rng, n=512):
+    pts = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 3, size=n), jnp.int32)
+    return api.ActiveSearcher.from_index(
+        build_index(pts, QCFG, identity_projection(pts), labels=labels), QCFG
+    )
+
+
+def test_queue_padded_search_bit_identical_ragged_sizes(rng):
+    """Every ragged request size 1..B round-trips the queue bit-identically
+    to a direct unpadded search — ids, dists, AND the truncated/Eq.-1 stat
+    fields, each sliced to exactly the submitted rows."""
+    s = _searcher(rng)
+    for n in range(1, 10):  # crosses the 1/2/4/8/16 pow2 boundaries
+        queries = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+        q = DynamicBatcher(s, k=5)
+        fut = q.submit(queries)
+        q.drain()
+        got, want = fut.result(timeout=0), s.search(queries, 5)
+        for f in api.SearchResult._fields:
+            a = np.asarray(getattr(got, f))
+            assert a.shape[0] == n, f"{f}: pad leaked into shape {a.shape}"
+            np.testing.assert_array_equal(
+                a, np.asarray(getattr(want, f)), err_msg=f"n={n}:{f}")
+        assert q.stats["pad_rows"] == _pow2(n) - n
+
+
+def test_queue_padded_classify_bit_identical_ragged_sizes(rng):
+    s = _searcher(rng)
+    for n in (1, 3, 5, 8):
+        queries = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+        q = DynamicBatcher(s, k=5)
+        fut = q.submit(queries, op="classify")
+        q.drain()
+        got = np.asarray(fut.result(timeout=0))
+        assert got.shape == (n,)
+        np.testing.assert_array_equal(
+            got, np.asarray(s.classify(queries, 5)), err_msg=f"n={n}")
+
+
+def test_queue_coalesces_and_slices_per_request(rng):
+    """Several ragged requests coalesce into ONE padded batch; each future
+    resolves to exactly its own rows."""
+    s = _searcher(rng)
+    q = DynamicBatcher(s, k=5, max_batch=64)
+    sizes = (1, 3, 5, 2)
+    queries = [jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+               for n in sizes]
+    futs = [q.submit(x) for x in queries]
+    q.drain()
+    assert q.stats["batches"] == 1
+    assert q.stats["pad_rows"] == _pow2(sum(sizes)) - sum(sizes)
+    for x, fut in zip(queries, futs):
+        got, want = fut.result(timeout=0), s.search(x, 5)
+        for f in api.SearchResult._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, f)), np.asarray(getattr(want, f)),
+                err_msg=f)
+
+
+def test_queue_pads_never_inflate_truncation_stats(rng):
+    """The queue's truncated_rows counter matches the direct search's count
+    over the REAL rows — replicated pad rows (which truncate whenever the
+    last real row does) are excluded."""
+    rng2 = np.random.default_rng(7)
+    # clustered points overflow row_cap=8 buckets -> real truncation
+    pts = jnp.asarray(rng2.normal(size=(512, 2)) * 0.05, jnp.float32)
+    s = api.ActiveSearcher.from_index(
+        build_index(pts, QCFG, identity_projection(pts)), QCFG)
+    queries = jnp.asarray(rng2.normal(size=(5, 2)) * 0.05, jnp.float32)
+    direct = int(np.asarray(s.search(queries, 5).truncated).sum())
+    assert direct > 0, "fixture should truncate"
+    q = DynamicBatcher(s, k=5)
+    q.submit(queries)
+    q.drain()
+    assert q.stats["pad_rows"] == 3
+    assert q.stats["truncated_rows"] == direct
+
+
+def test_queue_inserts_drain_between_search_batches(rng):
+    """A queued insert is invisible to the search batch already in flight
+    and visible to the next one — the backlog drains on the batch boundary
+    with the counters tracking it."""
+    s = _searcher(rng)
+    queries = jnp.asarray(rng.normal(size=(4, 2)), jnp.float32)
+    new_pts = jnp.asarray(rng.normal(size=(32, 2)), jnp.float32)
+    new_labels = jnp.asarray(rng.integers(0, 3, size=32), jnp.int32)
+
+    q = DynamicBatcher(s, k=5)
+    f1 = q.submit(queries)
+    assert q.offer_insert(new_pts, labels=new_labels) == 32
+    assert q.stats["insert_backlog"] == 32
+    assert q.step()  # serves the search batch FIRST (insert still queued)
+    assert q.stats["insert_backlog"] == 32
+    f2_before = s.search(queries, 5)
+    for f in api.SearchResult._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(f1.result(timeout=0), f)),
+            np.asarray(getattr(f2_before, f)), err_msg=f"pre-insert:{f}")
+
+    assert q.step()  # drains the backlog between batches
+    assert q.stats["insert_backlog"] == 0
+    assert q.stats["inserts_applied"] == 32
+    assert q.stats["insert_backlog_peak"] == 32
+
+    f2 = q.submit(queries)
+    q.drain()
+    grown = s.insert(new_pts, labels=new_labels)
+    for f in api.SearchResult._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(f2.result(timeout=0), f)),
+            np.asarray(getattr(grown.search(queries, 5), f)),
+            err_msg=f"post-insert:{f}")
