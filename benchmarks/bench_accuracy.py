@@ -1,18 +1,58 @@
-"""Paper §3 accuracy experiment, faithful settings: 3000x3000 image, r0=100,
-k=11, 3 classes, 100 query points, exact kNN as ground truth.  The paper
-reports 'up to 98%'."""
+"""Accuracy benchmark -> BENCH_accuracy.json (paper §3 + quantized recall).
+
+Two sections:
+
+  paper      The §3 experiment at faithful settings (3000x3000 image,
+             r0=100, k=11, 3 classes, exact kNN as ground truth; the paper
+             reports 'up to 98%').
+  quantized  The recall contract of the `pallas_q8` backend: recall@k vs
+             the exact comparator for every grid-backed backend, the
+             fraction of queries whose int8 shortlist contains ALL of the
+             exact fused top-k (the conditional-bit-parity precondition),
+             and the candidate-stage bytes moved per batch q8 vs fp32.
+             Runs at d=32 with planted 2-d structure (strong first two
+             dims) so the PCA grid projection preserves neighborhoods —
+             the regime the int8 store targets: real feature dims, not the
+             paper's d=2 toy where a 4-byte/row scale could never win 3x.
+
+The JSON records the floors (`recall_floor`, `bytes_reduction_floor`)
+alongside the measurements; `scripts/render_bench_table.py --check` fails
+loudly when `pallas_q8` recall@k drops below the floor, the bytes
+reduction regresses, or any exact backend's parity flag flips — same
+pattern as the existing parity gates.
+
+Env knobs:
+  REPRO_BENCH_QUICK=1      shrink to CI-friendly sizes
+  REPRO_BENCH_ARTIFACTS=D  directory for BENCH_accuracy.json (default ".")
+"""
 
 from __future__ import annotations
 
+import json
+import os
+import time
+
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Csv, paper_data
+from repro import api
 from repro.api import ActiveSearcher, identity_projection
 from repro.configs.paper_active_search import K, N_CLASSES, N_QUERIES, PAPER_GRID
+from repro.core import batched
+
+RECALL_FLOOR = 0.95
+BYTES_REDUCTION_FLOOR = 3.0
 
 
-def main(ns=(1_000, 10_000, 100_000), seeds=(0, 1, 2)) -> None:
-    csv = Csv("n,seed,mode,accuracy_vs_exact")
+def _quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+
+def _paper_section(csv: Csv) -> dict:
+    ns = (1_000,) if _quick() else (1_000, 10_000, 100_000)
+    seeds = (0,) if _quick() else (0, 1, 2)
+    rows = []
     for n in ns:
         for seed in seeds:
             rng = np.random.default_rng(seed)
@@ -26,7 +66,111 @@ def main(ns=(1_000, 10_000, 100_000), seeds=(0, 1, 2)) -> None:
             for mode in ("paper", "refined"):
                 pred = searcher.classify(q, K, mode=mode)
                 acc = float(np.mean(np.asarray(pred) == np.asarray(truth)))
-                csv.row(n, seed, mode, f"{acc:.3f}")
+                csv.row("paper", n, seed, mode, f"{acc:.3f}")
+                rows.append({"n": n, "seed": seed, "mode": mode,
+                             "accuracy_vs_exact": acc})
+    return {"k": K, "rows": rows}
+
+
+def _planted(rng, m: int, d: int) -> jnp.ndarray:
+    """d-dim points whose neighborhoods live in the first two dims."""
+    x = np.zeros((m, d), np.float32)
+    x[:, :2] = rng.normal(size=(m, 2)) * 50.0
+    x[:, 2:] = rng.normal(size=(m, d - 2)) * 0.3
+    return jnp.asarray(x)
+
+
+def _quantized_section(csv: Csv) -> dict:
+    rng = np.random.default_rng(0)
+    n, b = (5_000, 64) if _quick() else (20_000, 128)
+    k, d = 10, 32
+    cfg = api.GridConfig(grid_size=256, tile=16, n_classes=3, window=32,
+                         row_cap=32, r0=10, k_slack=2.0)
+    pts = _planted(rng, n, d)
+    labels = jnp.asarray(rng.integers(0, 3, size=n), jnp.int32)
+    searcher = ActiveSearcher.build(pts, labels=labels, cfg=cfg)
+    q = _planted(rng, b, d)
+
+    truth = searcher.with_plan(backend="exact").search(q, k)
+    t_valid = float(jnp.sum(truth.valid))
+    fused = searcher.with_plan(backend="pallas").search(q, k)
+    rerank_k = batched.resolve_rerank_k(cfg, k, None)
+
+    # shortlist-hit fraction: queries whose int8 shortlist contains EVERY
+    # row the exact fused stage returned — on those lanes pallas_q8 is
+    # bit-identical to pallas by the re-rank invariance
+    from repro.core.quantized import quantize_index
+
+    store = quantize_index(searcher.index, cfg)
+    _sld, sl_gidx = batched.q8_shortlist(
+        searcher.index, store, cfg, q, rerank_k,
+    )
+    sl_ids = jnp.where(
+        sl_gidx >= 0, jnp.take(searcher.index.ids_sorted, jnp.maximum(sl_gidx, 0)), -2
+    )
+    covered = jnp.all(
+        jnp.any(fused.ids[:, :, None] == sl_ids[:, None, :], axis=-1)
+        | ~fused.valid,
+        axis=-1,
+    )
+    shortlist_hit_frac = float(jnp.mean(covered))
+
+    backends = {}
+    grid_exact = ("jnp", "pallas", "pallas_gather")
+    for name in grid_exact + ("pallas_q8",):
+        res = searcher.with_plan(backend=name).search(q, k)
+        hit = jnp.any(res.ids[:, :, None] == truth.ids[:, None, :], axis=1)
+        recall = float(jnp.sum(hit & truth.valid) / t_valid)
+        parity = (
+            bool(jnp.all(res.ids == fused.ids))
+            if name in grid_exact else None
+        )
+        rec = {"recall_at_k": recall, "parity_vs_jnp": parity}
+        if name == "pallas_q8":
+            q8_hit = jnp.any(res.ids[:, :, None] == fused.ids[:, None, :],
+                             axis=1)
+            rec["recall_vs_pallas"] = float(
+                jnp.sum(q8_hit & fused.valid) / jnp.maximum(jnp.sum(fused.valid), 1)
+            )
+            rec["shortlist_hit_frac"] = shortlist_hit_frac
+        backends[name] = rec
+        csv.row("quantized", n, 0, name, f"{recall:.3f}")
+
+    # candidate-stage HBM bytes per batch, honest accounting: the q8 path
+    # pays 1 byte/dim + a 4-byte scale per candidate row, PLUS the fp32
+    # re-rank's second DMA of rerank_k rows; the fp32 fused path pays
+    # 4 bytes/dim for every candidate row
+    cand = cfg.window * cfg.row_cap
+    fp32_bytes = b * cand * d * 4
+    q8_bytes = b * (cand * (d + 4) + rerank_k * d * 4)
+    reduction = fp32_bytes / q8_bytes
+    csv.row("quantized", n, 0, "bytes_reduction", f"{reduction:.2f}x")
+
+    return {
+        "n": n, "batch": b, "k": k, "d": d, "rerank_k": rerank_k,
+        "recall_floor": RECALL_FLOOR,
+        "bytes_reduction_floor": BYTES_REDUCTION_FLOOR,
+        "backends": backends,
+        "candidate_bytes": {
+            "fp32": fp32_bytes,
+            "q8": q8_bytes,
+            "reduction_x": reduction,
+        },
+    }
+
+
+def main() -> None:
+    csv = Csv("section,n,seed,variant,value")
+    results = {
+        "schema": 1, "timestamp": time.time(), "quick": _quick(),
+        "paper": _paper_section(csv),
+        "quantized": _quantized_section(csv),
+    }
+    art_dir = os.environ.get("REPRO_BENCH_ARTIFACTS", ".")
+    path = os.path.join(art_dir, "BENCH_accuracy.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"[bench_accuracy] wrote {path}", flush=True)
     return csv
 
 

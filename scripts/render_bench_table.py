@@ -1,5 +1,6 @@
 """Render the CI perf artifacts (BENCH_kernels.json / BENCH_e2e.json /
-BENCH_mutation.json / BENCH_convergence.json / BENCH_serve.json) into the
+BENCH_mutation.json / BENCH_convergence.json / BENCH_accuracy.json /
+BENCH_serve.json) into the
 markdown throughput table embedded in README.md between the
 `<!-- BENCH TABLE BEGIN/END -->` markers.
 
@@ -99,6 +100,23 @@ def render(art_dir: str) -> str:
         rows.append(f"| convergence | schedule parity vs jnp oracle | "
                     f"{ad['parity_adaptive_vs_jnp_oracle']} |")
 
+    acc = _load(art_dir, "BENCH_accuracy.json")
+    if acc and "quantized" in acc:
+        qz = acc["quantized"]
+        for name, rec in sorted(qz.get("backends", {}).items()):
+            rows.append(f"| accuracy | `{name}` recall@{qz['k']} vs exact | "
+                        f"{rec['recall_at_k']:.3f} |")
+        q8 = qz.get("backends", {}).get("pallas_q8", {})
+        if "shortlist_hit_frac" in q8:
+            rows.append(f"| accuracy | q8 shortlist ⊇ exact top-{qz['k']} "
+                        f"frac (rerank_k={qz['rerank_k']}) | "
+                        f"{q8['shortlist_hit_frac']:.3f} |")
+        cb = qz.get("candidate_bytes")
+        if cb:
+            rows.append(f"| accuracy | candidate-stage bytes, fp32 → q8 | "
+                        f"{cb['fp32']:,} → {cb['q8']:,} "
+                        f"({cb['reduction_x']:.1f}x) |")
+
     srv = _load(art_dir, "BENCH_serve.json")
     if srv and "queue" in srv:
         q = srv["queue"]
@@ -159,6 +177,31 @@ def _parity_problems(art_dir: str) -> list[str]:
         problems.append("BENCH_convergence.json: adaptive r0 did not reduce "
                         "mean Eq.-1 iterations on the skewed-density config "
                         "(mean_iters_reduction <= 0)")
+    acc = _load(art_dir, "BENCH_accuracy.json")
+    qz = (acc or {}).get("quantized") or {}
+    floor = qz.get("recall_floor")
+    q8 = qz.get("backends", {}).get("pallas_q8", {})
+    if floor is not None and q8.get("recall_at_k", 1.0) < floor:
+        problems.append(
+            f"BENCH_accuracy.json: pallas_q8 recall@{qz.get('k')} "
+            f"{q8['recall_at_k']:.3f} dropped below the recorded floor "
+            f"{floor} (quantized.backends.pallas_q8.recall_at_k)"
+        )
+    bfloor = qz.get("bytes_reduction_floor")
+    red = qz.get("candidate_bytes", {}).get("reduction_x")
+    if bfloor is not None and red is not None and red < bfloor:
+        problems.append(
+            f"BENCH_accuracy.json: q8 candidate-stage bytes reduction "
+            f"{red:.2f}x fell below the floor {bfloor}x "
+            f"(quantized.candidate_bytes.reduction_x)"
+        )
+    for name, rec in sorted(qz.get("backends", {}).items()):
+        if rec.get("parity_vs_jnp") is False:
+            problems.append(
+                f"BENCH_accuracy.json: exact backend {name!r} lost "
+                f"bit-parity with the fused reference on the quantized "
+                f"config (quantized.backends.{name}.parity_vs_jnp)"
+            )
     srv = _load(art_dir, "BENCH_serve.json")
     if srv and srv.get("queue", {}).get("parity_queue_vs_direct") is False:
         problems.append("BENCH_serve.json: dynamic-batching queue results "

@@ -429,6 +429,243 @@ register_candidate_pipeline(CandidatePipeline(
 ))
 
 
+# ---------------------------------------------------- quantized (q8) stage ---
+
+
+def q8_shortlist(
+    index: GridIndex,
+    store,  # QuantizedStore
+    cfg: GridConfig,
+    queries: jax.Array,
+    rerank_k: int,
+    spans: tuple[jax.Array, jax.Array] | None = None,
+    interpret: bool | None = None,
+    d_chunk: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """The coarse int8 stage alone: approx scores + global CSR shortlist.
+
+    Exposed for tests and the accuracy bench (shortlist-hit-fraction
+    instrumentation); `search_q8` is the full coarse->re-rank path.
+    """
+    q_grid = proj_lib.to_grid_coords(index.proj, queries, cfg.grid_size)
+    start, end = spans if spans is not None else window_spans(index, cfg, q_grid)
+    n = index.points_sorted.shape[0]
+    return ops.csr_shortlist_q8(
+        store.q_points, store.row_scales, start, end,
+        queries.astype(jnp.float32), rerank_k, n, cfg.row_cap,
+        metric=cfg.metric, d_chunk=d_chunk, interpret=interpret,
+    )
+
+
+def _q8_select(index, store, cfg, q_grid, queries, spans, k, rerank_k, mode,
+               radius, interpret, d_chunk):
+    """int8 coarse shortlist -> exact fp32 re-rank of `rerank_k` rows.
+
+    NOT a CandidatePipeline: the pipeline registry promises bit-parity
+    interchange, and the q8 stage promises recall instead (ISSUE: recall@k
+    contract + conditional bit-parity).  Paper mode delegates to the exact
+    fused stage — it ranks 2-d cell CENTERS, which are integer-plus-half by
+    construction, so there is no bandwidth to win by quantizing them.
+
+    Re-rank invariance: the shortlist is sorted ascending by global CSR row
+    before the exact re-rank, so `candidate_topk`'s first-index tie-break
+    means lowest-global-row — exactly the fused kernel's tie-break (its
+    window enumerates valid rows in ascending CSR order).  With the same
+    d_chunk decomposition both paths compute the identical
+    `sqrt(max(sum, 0))`, so whenever the shortlist contains the exact
+    top-k, the re-ranked (dists, gidx) are bit-identical to `pallas`
+    (tests/test_quantized.py pins this).
+    """
+    if mode == "paper":
+        return _fused_select(index, cfg, q_grid, queries, spans, k, mode,
+                             radius, interpret, d_chunk)
+    pts, _crd, _lab, _ids, _n, n_pad = padded_csr(index, cfg.row_cap)
+    sld, sli = q8_shortlist(
+        index, store, cfg, queries, rerank_k, spans=spans,
+        interpret=interpret, d_chunk=d_chunk,
+    )
+    del sld  # approx scores only ordered the shortlist; re-rank is exact
+    # stable ascending sort by global row, -1 pads parked last (n_pad is
+    # strictly greater than any live row index)
+    order = jnp.argsort(jnp.where(sli >= 0, sli, n_pad), axis=1)
+    sl = jnp.take_along_axis(sli, order, axis=1)          # (B, rerank_k)
+    valid = sl >= 0
+    cand = jnp.take(pts, jnp.maximum(sl, 0), axis=0)      # (B, rerank_k, d)
+    rd = pts.shape[-1]
+    # mirror the fused kernel's decomposition (d_chunk=None -> one sum) so
+    # float accumulation order matches bit-for-bit
+    dc = rd if d_chunk is None else max(1, min(d_chunk, rd))
+    outd, outi = ops.candidate_topk(
+        cand, valid, queries.astype(jnp.float32), k,
+        metric=cfg.metric, d_chunk=dc, interpret=interpret,
+    )
+    gidx = jnp.take_along_axis(sl, jnp.maximum(outi, 0), axis=1)
+    return outd, jnp.where(outi >= 0, gidx, -1)
+
+
+def resolve_rerank_k(cfg: GridConfig, k: int, rerank_k: int | None) -> int:
+    """The shortlist length the q8 path actually runs with.
+
+    None -> min(max(4k, 32), window*row_cap): deep enough that the exact
+    top-k survives approximate ordering at CI configs, capped at the window
+    (a shortlist cannot out-run its candidate pool).  Explicit values are
+    validated eagerly: rerank_k < k can never return k exact rows.
+    """
+    cap = cfg.window * cfg.row_cap
+    if rerank_k is None:
+        return min(max(4 * k, 32), cap)
+    if rerank_k < k:
+        raise ValueError(
+            f"rerank_k={rerank_k} < k={k}: the exact re-rank can only "
+            f"return rows the shortlist contains"
+        )
+    return min(rerank_k, cap)
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "cfg", "k", "rerank_k", "mode", "interpret", "d_chunk", "adaptive_r0",
+    ),
+)
+def _search_q8_impl(
+    index: GridIndex,
+    store,  # QuantizedStore
+    cfg: GridConfig,
+    queries: jax.Array,
+    k: int,
+    rerank_k: int,
+    mode: str = "refined",
+    interpret: bool | None = None,
+    d_chunk: int | None = None,
+    adaptive_r0: bool = False,
+) -> SearchResult:
+    q_grid = proj_lib.to_grid_coords(index.proj, queries, cfg.grid_size)
+    stats = radius_search_batched(
+        index, cfg, q_grid, k, interpret, adaptive_r0=adaptive_r0
+    )
+    r = stats["radius"]
+    start, end = window_spans(index, cfg, q_grid)
+    truncated = ((2 * r + 1) > jnp.int32(cfg.window)) | jnp.any(
+        end - start > jnp.int32(cfg.row_cap), axis=-1
+    )
+
+    outd, outi = _q8_select(
+        index, store, cfg, q_grid, queries, (start, end), k, rerank_k, mode,
+        r, interpret, d_chunk,
+    )
+
+    _pts, _crd, lab, ids, _n, _n_pad = padded_csr(index, cfg.row_cap)
+    sel_valid = jnp.isfinite(outd)
+    idx = jnp.maximum(outi, 0)
+    return SearchResult(
+        ids=jnp.where(sel_valid, jnp.take(ids, idx), -1),
+        dists=outd.astype(jnp.float32),
+        labels=jnp.where(sel_valid, jnp.take(lab, idx), -1),
+        valid=sel_valid,
+        radius=stats["radius"],
+        count=stats["count"],
+        iters=stats["iters"],
+        converged=stats["converged"],
+        truncated=truncated,
+    )
+
+
+def search_q8(
+    index: GridIndex,
+    store,  # QuantizedStore (core.quantized.quantize_index(index, cfg))
+    cfg: GridConfig,
+    queries: jax.Array,
+    k: int,
+    mode: str = "refined",
+    rerank_k: int | None = None,
+    interpret: bool | None = None,
+    chunk_size: int | None = None,
+    d_chunk: int | None = None,
+    adaptive_r0: bool = False,
+) -> SearchResult:
+    """Quantized-candidate active search (the `pallas_q8` backend).
+
+    Identical counting/span stages to `search`; the candidate stage DMAs
+    the int8 store, shortlists top-`rerank_k` by approximate int32 scores,
+    then exact-re-ranks the shortlist against fp32 rows.  Final (dists,
+    ids) are full fp32 — approximate only in WHICH rows made the shortlist
+    (recall contract; see docs/API.md).  Paper mode is exact (cell centers
+    gain nothing from quantization)."""
+    rk = resolve_rerank_k(cfg, k, rerank_k)
+    return run_chunked(
+        lambda q: _search_q8_impl(index, store, cfg, q, k, rk, mode,
+                                  interpret, d_chunk, adaptive_r0),
+        queries,
+        chunk_size,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "cfg", "k", "rerank_k", "mode", "interpret", "d_chunk", "adaptive_r0",
+    ),
+)
+def _classify_q8_impl(
+    index: GridIndex,
+    store,  # QuantizedStore
+    cfg: GridConfig,
+    queries: jax.Array,
+    k: int,
+    rerank_k: int,
+    mode: str = "refined",
+    interpret: bool | None = None,
+    d_chunk: int | None = None,
+    adaptive_r0: bool = False,
+) -> jax.Array:
+    if cfg.n_classes <= 0:
+        raise ValueError("classify() needs an index built with n_classes > 0")
+
+    q_grid = proj_lib.to_grid_coords(index.proj, queries, cfg.grid_size)
+
+    if mode == "paper":
+        stats = radius_search_batched(
+            index, cfg, q_grid, k, interpret, adaptive_r0=adaptive_r0
+        )
+        counts = batched_counts(index, cfg, q_grid, stats["radius"], interpret)
+        return jnp.argmax(counts, axis=-1).astype(jnp.int32)
+
+    res = _search_q8_impl(index, store, cfg, queries, k, rerank_k,
+                          mode="refined", interpret=interpret, d_chunk=d_chunk,
+                          adaptive_r0=adaptive_r0)
+    refined = majority_vote(res.labels, res.valid, cfg.n_classes)
+    fallback = jnp.argmax(
+        batched_counts(index, cfg, q_grid, res.radius, interpret), axis=-1
+    ).astype(jnp.int32)
+    short = jnp.sum(res.valid.astype(jnp.int32), axis=1) < k
+    return jnp.where(short | res.truncated, fallback, refined)
+
+
+def classify_q8(
+    index: GridIndex,
+    store,  # QuantizedStore
+    cfg: GridConfig,
+    queries: jax.Array,
+    k: int,
+    mode: str = "refined",
+    rerank_k: int | None = None,
+    interpret: bool | None = None,
+    chunk_size: int | None = None,
+    d_chunk: int | None = None,
+    adaptive_r0: bool = False,
+) -> jax.Array:
+    """Quantized-candidate kNN classification (the `pallas_q8` backend) —
+    `classify`'s contract with `search_q8` as the refined-vote stage."""
+    rk = resolve_rerank_k(cfg, k, rerank_k)
+    return run_chunked(
+        lambda q: _classify_q8_impl(index, store, cfg, q, k, rk, mode,
+                                    interpret, d_chunk, adaptive_r0),
+        queries,
+        chunk_size,
+    )
+
+
 # -------------------------------------------------------------- entry points -
 
 

@@ -21,8 +21,9 @@ HOW a search executes lives entirely in the frozen `ExecutionPlan`
 (backend name, Pallas interpret override, chunked streaming, donate-able
 device placement); WHAT is searched lives in the (index, cfg) pair the
 handle carries.  Backends are uniform `BackendImpl` adapters resolved from a
-registry (`register_backend`) — `jnp`, `pallas`, `exact`, `sharded`, and the
-count-only `pallas_stacked` benchmark baseline ship registered; new
+registry (`register_backend`) — `jnp`, `pallas`, `pallas_q8`, `exact`,
+`sharded`, and the count-only `pallas_stacked` benchmark baseline ship
+registered; new
 execution paths (TPU-Mosaic-tuned plans, async/caching) plug in without
 widening any signature.
 
@@ -62,7 +63,7 @@ class ExecutionPlan:
     """HOW a search executes — frozen, hashable, safe as a jit static arg.
 
     backend:    registered backend name ("jnp" | "pallas" | "pallas_gather"
-                | "exact" | "sharded" | anything added via
+                | "pallas_q8" | "exact" | "sharded" | anything added via
                 `register_backend`).
     interpret:  force/disable Pallas interpret mode (Pallas-backed backends
                 only; None = REPRO_PALLAS_INTERPRET).
@@ -75,6 +76,14 @@ class ExecutionPlan:
                 the jnp path).  Setting a cap bounds kernel VMEM for very
                 large d at the cost of reassociating the float32 distance
                 sums.
+    rerank_k:   shortlist depth of the quantized candidate stage (backends
+                with `supports_quantized` only, i.e. "pallas_q8"): the int8
+                coarse pass keeps the best `rerank_k` rows by approximate
+                int32 score, then the exact fp32 re-rank ranks ONLY those.
+                None = min(max(4k, 32), window*row_cap) at call time.
+                Larger values raise recall and cost more re-rank bandwidth;
+                must be >= k (validated at the search call, where k is
+                known) and is clamped to window*row_cap.
     device:     optional placement target (jax.Device or Sharding); queries
                 are `jax.device_put` there before dispatch.
     donate:     donate the caller's query buffer on placement (serve-scale
@@ -91,6 +100,7 @@ class ExecutionPlan:
     interpret: bool | None = None
     chunk_size: int | None = None
     d_chunk: int | None = None
+    rerank_k: int | None = None
     device: Any = None
     donate: bool = False
     adaptive_r0: bool = False
@@ -103,6 +113,10 @@ class ExecutionPlan:
         if self.d_chunk is not None and self.d_chunk <= 0:
             raise ValueError(
                 f"d_chunk must be positive, got {self.d_chunk}"
+            )
+        if self.rerank_k is not None and self.rerank_k <= 0:
+            raise ValueError(
+                f"rerank_k must be positive, got {self.rerank_k}"
             )
         if self.donate and self.device is None:
             raise ValueError("donate=True needs an ExecutionPlan.device")
@@ -135,6 +149,9 @@ class BackendImpl:
     deltas on sharded ones): backends that can serve the refreshed snapshot
     declare True; count-only baselines opt out, and eager validators
     (`serve.py --knn-online`) reject them by capability, not name.
+    `supports_quantized` gates `plan.rerank_k`: only backends whose
+    candidate stage runs the int8 coarse-shortlist -> exact-re-rank path
+    ("pallas_q8") have a shortlist depth to set.
     """
 
     search: Callable[..., SearchResult] | None = None
@@ -144,6 +161,7 @@ class BackendImpl:
     supports_d_chunk: bool = False
     supports_adaptive_r0: bool = False
     supports_mutation: bool = False
+    supports_quantized: bool = False
     requires_mesh: bool = False
     description: str = ""
 
@@ -283,6 +301,9 @@ class ActiveSearcher:
                 if (not impl.supports_adaptive_r0
                         and "adaptive_r0" not in overrides):
                     overrides = {**overrides, "adaptive_r0": False}
+                if (not impl.supports_quantized
+                        and "rerank_k" not in overrides):
+                    overrides = {**overrides, "rerank_k": None}
         new = plan if plan is not None else dataclasses.replace(self.plan, **overrides)
         return dataclasses.replace(self, plan=new)
 
@@ -438,6 +459,12 @@ class ActiveSearcher:
                 f"adaptive_r0= only applies to backends that run the Eq.-1 "
                 f"radius loop; backend {self.plan.backend!r} does not "
                 f"support it"
+            )
+        if self.plan.rerank_k is not None and not impl.supports_quantized:
+            raise ValueError(
+                f"rerank_k= only applies to quantized-candidate backends "
+                f"(BackendImpl.supports_quantized); backend "
+                f"{self.plan.backend!r} does not support it"
             )
         fn = getattr(impl, op)
         if fn is None:
@@ -598,6 +625,45 @@ def _pallas_gather_classify(s: ActiveSearcher, queries, k, mode):
     return _pallas_classify(s, queries, k, mode, pipeline="gather")
 
 
+def _quantized_store(s: ActiveSearcher):
+    """The handle's int8 candidate store (core/quantized.py), memoized.
+
+    Same __dict__ side-channel as `_exact_ordered`: frozen dataclasses
+    still allow attribute caching, the quantization runs once per handle,
+    and every mutation (insert/delete/snapshot) returns a NEW handle, so
+    the memo can never serve a store for stale contents.  Never cached
+    under a trace (tracers on the handle would leak into later calls)."""
+    from repro.core import quantized as qz
+
+    cached = s.__dict__.get("_quantized_store_cache")
+    if cached is not None:
+        return cached
+    store = qz.quantize_index(s.index, s.cfg)
+    if not any(isinstance(a, jax.core.Tracer) for a in store):
+        object.__setattr__(s, "_quantized_store_cache", store)
+    return store
+
+
+def _pallas_q8_search(s: ActiveSearcher, queries, k, mode):
+    from repro.core import batched
+
+    return batched.search_q8(
+        s.index, _quantized_store(s), s.cfg, queries, k, mode=mode,
+        rerank_k=s.plan.rerank_k, interpret=s.plan.interpret,
+        d_chunk=s.plan.d_chunk, adaptive_r0=s.plan.adaptive_r0,
+    )
+
+
+def _pallas_q8_classify(s: ActiveSearcher, queries, k, mode):
+    from repro.core import batched
+
+    return batched.classify_q8(
+        s.index, _quantized_store(s), s.cfg, queries, k, mode=mode,
+        rerank_k=s.plan.rerank_k, interpret=s.plan.interpret,
+        d_chunk=s.plan.d_chunk, adaptive_r0=s.plan.adaptive_r0,
+    )
+
+
 def _pallas_count_at(s: ActiveSearcher, q_grid, radii):
     from repro.core import batched
 
@@ -723,6 +789,19 @@ register_backend("pallas_gather", BackendImpl(
     description="benchmark baseline / second oracle: same counting, but the "
                 "candidate stage is the PR-1..4 one-shot (B, w*row_cap) "
                 "four-field gather + dense candidate_topk",
+))
+register_backend("pallas_q8", BackendImpl(
+    search=_pallas_q8_search, classify=_pallas_q8_classify,
+    count_at=_pallas_count_at, supports_interpret=True,
+    supports_d_chunk=True, supports_adaptive_r0=True,
+    supports_mutation=True, supports_quantized=True,
+    description="quantized candidate stage: int8 store DMA + int32 VPU "
+                "scoring shortlists top-rerank_k rows, then an exact fp32 "
+                "re-rank of the shortlist emits the final (dists, ids).  "
+                "Recall contract vs the exact backends (approximate in "
+                "WHICH rows shortlist, never in returned distances); "
+                "counting stage identical to 'pallas' "
+                "(core/quantized.py + core/batched.py)",
 ))
 register_backend("pallas_stacked", BackendImpl(
     count_at=_pallas_stacked_count_at, supports_interpret=True,

@@ -685,6 +685,25 @@ def snapshot(m: MutableIndex, cfg: GridConfig) -> GridIndex:
     return index
 
 
+def quantized_snapshot(m: MutableIndex, cfg: GridConfig):
+    """Freeze the current contents AND their int8 candidate store.
+
+    Returns (GridIndex, quantized.QuantizedStore).  The store is a pure
+    function of the snapshot and `snapshot` reproduces `build_index`'s CSR
+    order bit-for-bit, so the mutability invariant extends to the quantized
+    path with no incremental bookkeeping: requantizing after insert/delete
+    yields EXACTLY the store a from-scratch rebuild would (the per-cell
+    scales see identical bucket contents in identical order).  This is what
+    the `pallas_q8` backend leans on — `build(P1).insert(P2)` serves
+    bit-identical quantized results to `build(P1 ∪ P2)`
+    (tests/test_quantized.py, tests/test_mutable.py).
+    """
+    from repro.core import quantized as qz
+
+    index = snapshot(m, cfg)
+    return index, qz.quantize_index(index, cfg)
+
+
 def compact(
     m: MutableIndex,
     cfg: GridConfig,

@@ -1,0 +1,265 @@
+"""Pallas TPU kernel: int8 CSR candidate scoring -> top-`rerank_k` shortlist.
+
+The exact fused kernel (`csr_candidate_topk.py`) is bandwidth-bound on its
+row DMAs: every window row moves `row_cap * d` float32s.  This variant is
+the coarse half of the quantized candidate path (`pallas_q8` backend): it
+DMAs the candidate rows from the INT8 store (`core/quantized.py`, per-cell
+symmetric scales) at a quarter of the bytes, scores them with int32
+arithmetic on the VPU, and streams a top-`rerank_k` shortlist of global
+CSR row indices.  The caller then exact-re-ranks ONLY those `rerank_k`
+rows against the fp32 store (a second, small DMA) with the existing
+streaming top-k (`candidate_topk`), so the final (dists, indices) are full
+fp32 — see `core/batched.py`.
+
+Scoring, per window row (one double-buffered int8 row DMA + one tiny
+`(row_cap, 1)` scale DMA):
+
+  qs   = clip(round(q / s_row), -QCLIP, QCLIP)       int32 (row_cap, d)
+  diff = q_points.int32 - qs                          int32
+  l2:  acc = sum_chunks f32(sum_chunk diff^2)         int32 inside a chunk
+  l1:  acc = sum_chunks   (sum_chunk |diff|)          int32 throughout
+  score = s_row * sqrt(acc)   (l2)   |   s_row * acc  (l1)
+
+The query is re-quantized against each row's (= its cell's) scale, so the
+integer difference is meaningful per cell; QCLIP bounds the code so a
+`<= Q8_MAX_CHUNK`-dim chunk's sum of squares cannot overflow int32 (the
+wrapper caps the accumulation chunk accordingly — queries farther than
+QCLIP/127 cell-ranges score saturated-far, which only ever demotes
+candidates that the exact re-rank would reject anyway).  Scores are
+APPROXIMATE by design: the contract is recall (the true top-k lands in the
+shortlist), not bit-parity — but masking and tie-breaks (clamped span
+starts, row-major window order, first-index argmin) are IDENTICAL to the
+exact kernel, so when the shortlist does contain the exact top-k, the
+downstream re-rank reproduces `pallas` bit-for-bit
+(tests/test_quantized.py).  Validated with interpret=True against
+ref.csr_shortlist_q8 (exact match: integer scoring is deterministic).
+
+VMEM per program: 2 * row_cap * d int8 + 2 * row_cap floats of row buffer
+(vs 2 * row_cap * d floats for the fp32 kernel) + the same
+2 * w * row_cap accumulator lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# query codes are clipped to +/-QCLIP cell-ranges; with diff bounded by
+# QCLIP + 127 a chunk of Q8_MAX_CHUNK dims accumulates |diff|^2 in int32
+# with ~3x headroom: 512 * (1023 + 127)^2 < 2^31
+QCLIP = 1023
+Q8_MAX_CHUNK = 512
+
+
+def _kernel(
+    span_ref,    # scalar prefetch: (B, 2w) int32 — [starts | ends] CSR spans
+    q_ref,       # (1, d) float32 — this query's ranking vector
+    store_ref,   # (n_pad, d) int8 — quantized CSR store, stays in HBM/ANY
+    scale_ref,   # (n_pad, 1) float32 — per-row (= per-cell) scales, HBM/ANY
+    outd_ref,    # (1, rerank_k) float32 — approximate scores (+inf pads)
+    outi_ref,    # (1, rerank_k) int32 — global CSR row indices (-1 pads)
+    buf_ref,     # scratch (2, row_cap, d) int8 — double-buffered rows
+    sbuf_ref,    # scratch (2, row_cap, 1) float32 — double-buffered scales
+    dist_ref,    # scratch (1, w*row_cap) float32
+    gidx_ref,    # scratch (1, w*row_cap) int32
+    sem,         # DMA semaphores (2,) — row buffers
+    ssem,        # DMA semaphores (2,) — scale buffers
+    *,
+    w: int,
+    row_cap: int,
+    rerank_k: int,
+    n: int,
+    n_pad: int,
+    d_chunks: tuple[tuple[int, int], ...],
+    metric: str,
+):
+    i = pl.program_id(0)
+    q = q_ref[...]                            # (1, d)
+    s_max = max(n_pad - row_cap, 0)
+
+    def s_cl(row):
+        # same clamp as the exact kernel: identical candidate order
+        return jnp.clip(span_ref[i, row], 0, s_max)
+
+    def row_dma(slot, row):
+        return pltpu.make_async_copy(
+            store_ref.at[pl.ds(s_cl(row), row_cap)],
+            buf_ref.at[slot],
+            sem.at[slot],
+        )
+
+    def scale_dma(slot, row):
+        return pltpu.make_async_copy(
+            scale_ref.at[pl.ds(s_cl(row), row_cap)],
+            sbuf_ref.at[slot],
+            ssem.at[slot],
+        )
+
+    row_dma(0, 0).start()
+    scale_dma(0, 0).start()
+
+    def body(row, carry):
+        slot = jax.lax.rem(row, 2)
+
+        @pl.when(row + 1 < w)
+        def _prefetch_next():
+            nxt = jax.lax.rem(row + 1, 2)
+            row_dma(nxt, row + 1).start()
+            scale_dma(nxt, row + 1).start()
+
+        row_dma(slot, row).wait()
+        scale_dma(slot, row).wait()
+        s = sbuf_ref[slot]                    # (row_cap, 1) float32
+        qs = jnp.clip(
+            jnp.round(q / s), -QCLIP, QCLIP
+        ).astype(jnp.int32)                   # (row_cap, d)
+        diff = buf_ref[slot].astype(jnp.int32) - qs
+        if metric == "l1":
+            acc = sum(
+                jnp.sum(jnp.abs(diff[:, c0:c0 + dc]), axis=1)
+                for c0, dc in d_chunks
+            )                                 # int32 (row_cap,)
+            dist = s[:, 0] * acc.astype(jnp.float32)
+        else:
+            acc = sum(
+                jnp.sum(
+                    diff[:, c0:c0 + dc] * diff[:, c0:c0 + dc], axis=1
+                ).astype(jnp.float32)         # int32 inside the chunk only
+                for c0, dc in d_chunks
+            )
+            dist = s[:, 0] * jnp.sqrt(acc)
+        j = s_cl(row) + jax.lax.broadcasted_iota(jnp.int32, (row_cap,), 0)
+        ok = (j >= span_ref[i, row]) & (j < span_ref[i, w + row]) & (j < n)
+        dist_ref[0, pl.ds(row * row_cap, row_cap)] = jnp.where(
+            ok, dist, jnp.inf
+        )
+        gidx_ref[0, pl.ds(row * row_cap, row_cap)] = j
+        return carry
+
+    jax.lax.fori_loop(0, w, body, 0)
+
+    dcur = dist_ref[...]                      # (1, w*row_cap)
+    col = jax.lax.broadcasted_iota(jnp.int32, dcur.shape, 1)
+    dists, idxs = [], []
+    for _ in range(rerank_k):
+        m = jnp.min(dcur, axis=1)             # (1,)
+        am = jnp.argmin(dcur, axis=1)         # (1,) first-index ties
+        dists.append(m[0])
+        g = gidx_ref[0, am[0]]
+        idxs.append(jnp.where(jnp.isfinite(m[0]), g, -1))
+        dcur = jnp.where(col == am[:, None], jnp.inf, dcur)
+    outd_ref[0, :] = jnp.stack(dists)
+    outi_ref[0, :] = jnp.stack(idxs)
+
+
+def q8_d_chunks(d: int, d_chunk: int | None) -> tuple[tuple[int, int], ...]:
+    """The (start, size) accumulation chunks for a d-dim q8 score.
+
+    Unlike the exact kernel (d_chunk=None = ONE reassociation-free sum, for
+    bit-parity with the jnp path), the q8 score is approximate by contract,
+    so the chunk is always capped at Q8_MAX_CHUNK — the int32 overflow
+    bound — and d_chunk only tightens it further.  Shared with the ref
+    oracle so kernel and oracle always agree on the summation tree.
+    """
+    dc = d if d_chunk is None else max(1, min(d_chunk, d))
+    dc = min(dc, Q8_MAX_CHUNK)
+    return tuple((c0, min(dc, d - c0)) for c0 in range(0, d, dc))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "rerank_k", "n", "row_cap", "metric", "d_chunk", "interpret"
+    ),
+)
+def csr_shortlist_q8(
+    q_store: jax.Array,     # (n_pad, d) int8 — quantized CSR store
+    row_scales: jax.Array,  # (n_pad, 1) float32 — per-row cell scales
+    starts: jax.Array,      # (B, w) int32 — window-row span starts
+    ends: jax.Array,        # (B, w) int32 — window-row span ends
+    queries: jax.Array,     # (B, d) float32 — per-query ranking vectors
+    rerank_k: int,
+    n: int,                 # live CSR rows (store rows >= n are padding)
+    row_cap: int,
+    metric: str = "l2",
+    d_chunk: int | None = None,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Contract identical to ref.csr_shortlist_q8.
+
+    Returns (scores (B, rerank_k) float32 approximate, +inf pads; idx
+    (B, rerank_k) int32 GLOBAL CSR row indices with -1 pads), best-first.
+    """
+    n_pad, d = q_store.shape
+    b, w = starts.shape
+    if q_store.dtype != jnp.int8:
+        raise ValueError(f"q_store must be int8, got {q_store.dtype}")
+    if row_scales.shape != (n_pad, 1):
+        raise ValueError(
+            f"row_scales shape {row_scales.shape} != ({n_pad}, 1); one "
+            f"scale per padded CSR row (core/quantized.py)"
+        )
+    if n_pad < row_cap:
+        raise ValueError(
+            f"store has {n_pad} rows but row_cap={row_cap}; pad the store "
+            f"(active_search.padded_csr) so every span slice is in bounds"
+        )
+    if ends.shape != (b, w):
+        raise ValueError(f"ends shape {ends.shape} != starts {starts.shape}")
+    if queries.shape != (b, d):
+        raise ValueError(
+            f"queries shape {queries.shape} does not match spans batch "
+            f"{b} x store dim {d}"
+        )
+    if not 1 <= rerank_k <= w * row_cap:
+        raise ValueError(
+            f"rerank_k={rerank_k} must be in [1, window*row_cap = "
+            f"{w * row_cap}] (the shortlist is drawn from one window)"
+        )
+    d_chunks = q8_d_chunks(d, d_chunk)
+
+    spans = jnp.concatenate([starts, ends], axis=1).astype(jnp.int32)
+    kernel = functools.partial(
+        _kernel,
+        w=w, row_cap=row_cap, rerank_k=rerank_k, n=n, n_pad=n_pad,
+        d_chunks=d_chunks, metric=metric,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, *_: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # int8 store: manual DMA
+            pl.BlockSpec(memory_space=pltpu.ANY),  # scales: manual DMA
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rerank_k), lambda i, *_: (i, 0)),
+            pl.BlockSpec((1, rerank_k), lambda i, *_: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, row_cap, d), jnp.int8),
+            pltpu.VMEM((2, row_cap, 1), jnp.float32),
+            pltpu.VMEM((1, w * row_cap), jnp.float32),
+            pltpu.VMEM((1, w * row_cap), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, rerank_k), jnp.float32),
+            jax.ShapeDtypeStruct((b, rerank_k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        spans,
+        queries.astype(jnp.float32),
+        q_store,
+        row_scales.astype(jnp.float32),
+    )

@@ -17,6 +17,9 @@ from repro.kernels.candidate_topk import candidate_topk as _candidate_topk
 from repro.kernels.csr_candidate_topk import (
     csr_candidate_topk as _csr_candidate_topk,
 )
+from repro.kernels.csr_candidate_topk_q8 import (
+    csr_shortlist_q8 as _csr_shortlist_q8,
+)
 from repro.kernels.tile_count import tile_count as _tile_count
 from repro.kernels.tile_count_multilevel import (
     tile_count_multilevel as _tile_count_multilevel,
@@ -61,6 +64,17 @@ def csr_candidate_topk(
         store, starts, ends, queries, k, n, row_cap, metric=metric,
         radii=radii, center_cells=center_cells, d_chunk=d_chunk,
         interpret=interpret,
+    )
+
+
+def csr_shortlist_q8(
+    q_store, row_scales, starts, ends, queries, rerank_k, n, row_cap,
+    metric="l2", d_chunk=None, interpret=None,
+):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _csr_shortlist_q8(
+        q_store, row_scales, starts, ends, queries, rerank_k, n, row_cap,
+        metric=metric, d_chunk=d_chunk, interpret=interpret,
     )
 
 

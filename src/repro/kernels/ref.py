@@ -128,6 +128,61 @@ def csr_candidate_topk(
     return dists, jnp.where(jnp.isfinite(dists), gidx, -1)
 
 
+def csr_shortlist_q8(
+    q_store: jax.Array,     # (n_pad, d) int8 — quantized CSR store
+    row_scales: jax.Array,  # (n_pad, 1) float32 — per-row cell scales
+    starts: jax.Array,      # (B, w) int32 window-row span starts
+    ends: jax.Array,        # (B, w) int32 window-row span ends
+    queries: jax.Array,     # (B, d) float32
+    rerank_k: int,
+    n: int,                 # live CSR rows
+    row_cap: int,
+    metric: str = "l2",
+    d_chunk: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the int8 shortlist kernel (csr_candidate_topk_q8).
+
+    The scoring is integer-deterministic, so this is an EXACT-match oracle
+    (same clip/round/chunked accumulation as the kernel), not an allclose
+    one.  Returns approx scores (B, rerank_k) float32 with +inf pads and
+    GLOBAL CSR row indices (B, rerank_k) int32 with -1 pads, best-first.
+    """
+    from repro.kernels.csr_candidate_topk_q8 import QCLIP, q8_d_chunks
+
+    n_pad, dim = q_store.shape
+    b, w = starts.shape
+    s_cl = jnp.clip(starts, 0, max(n_pad - row_cap, 0))          # (B, w)
+    j = s_cl[:, :, None] + jnp.arange(row_cap, dtype=jnp.int32)  # (B, w, cap)
+    ok = (j >= starts[:, :, None]) & (j < ends[:, :, None]) & (j < n)
+    flat = j.reshape(b, w * row_cap)
+    cand = jnp.take(q_store, flat, axis=0).astype(jnp.int32)  # (B, C, d)
+    s = jnp.take(row_scales, flat, axis=0)                    # (B, C, 1)
+    qs = jnp.clip(
+        jnp.round(queries.astype(jnp.float32)[:, None, :] / s), -QCLIP, QCLIP
+    ).astype(jnp.int32)
+    diff = cand - qs
+    chunks = q8_d_chunks(dim, d_chunk)
+    if metric == "l1":
+        acc = sum(
+            jnp.sum(jnp.abs(diff[:, :, c0:c0 + dc]), axis=-1)
+            for c0, dc in chunks
+        )
+        d = s[:, :, 0] * acc.astype(jnp.float32)
+    else:
+        acc = sum(
+            jnp.sum(
+                diff[:, :, c0:c0 + dc] * diff[:, :, c0:c0 + dc], axis=-1
+            ).astype(jnp.float32)
+            for c0, dc in chunks
+        )
+        d = s[:, :, 0] * jnp.sqrt(acc)
+    d = jnp.where(ok.reshape(b, w * row_cap), d, jnp.inf)
+    neg, idx = lax.top_k(-d, rerank_k)
+    dists = -neg
+    gidx = jnp.take_along_axis(flat, idx, axis=1)
+    return dists, jnp.where(jnp.isfinite(dists), gidx, -1)
+
+
 def brute_knn(
     queries: jax.Array,  # (B, d) float32
     points: jax.Array,   # (N, d) float32

@@ -10,6 +10,11 @@ Two integration points:
     used inside any train step to bound cross-pod gradient traffic.
   * compressed_psum(): shard_map building block — quantize, psum the int8
     payload (8x less ICI traffic than fp32), dequantize, apply error feedback.
+
+The raw int8 round-trip (scale choice, clip, reconstruction) is the shared
+codec in `repro.utils.quantize` — the same one the quantized candidate
+store (`core/quantized.py`) uses — so the two paths can never drift; only
+the error-feedback wrapper is optimizer-specific and lives here.
 """
 
 from __future__ import annotations
@@ -20,15 +25,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-
-def _quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
-    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+from repro.utils.quantize import (
+    dequantize as _dequantize,
+    quantize_symmetric as _quantize,
+    quantize_with_scale,
+)
 
 
 def compress_leaf(g: jax.Array, err: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -59,8 +60,8 @@ def compressed_psum(g: jax.Array, err: jax.Array, axis: str) -> tuple[jax.Array,
     q, scale = _quantize(gf)
     # max-scale across replicas keeps the shared dequantization consistent
     scale = lax.pmax(scale, axis)
-    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
-    g_hat_local = q.astype(jnp.float32) * scale
+    q = quantize_with_scale(gf, scale)
+    g_hat_local = _dequantize(q, scale)
     total = lax.psum(q.astype(jnp.int32), axis).astype(jnp.float32) * scale
     n = lax.psum(jnp.ones((), jnp.float32), axis)
     return total / n, gf - g_hat_local

@@ -1,0 +1,45 @@
+"""Shared symmetric int8 round-trip helpers.
+
+One definition of the int8 codec used everywhere the repo trades precision
+for bandwidth, so the numerics can never drift apart:
+
+  * `optim/compression.py` — per-tensor gradient compression (the
+    error-feedback wrapper stays there; only the raw round-trip lives here).
+  * `core/quantized.py` — the per-cell quantized candidate store behind the
+    `pallas_q8` backend (one scale per CSR cell, broadcast per row).
+
+Symmetric codebook: `scale = max(|x|) / 127` (eps-floored so all-zero
+inputs stay representable), `q = clip(round(x / scale), -127, 127)`.
+-128 is never produced, so negation round-trips and the TPU int8 path never
+sees the asymmetric edge value.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# int8 symmetric codebook half-range: values land in [-127, 127]
+QMAX = 127
+_EPS = 1e-12
+
+
+def symmetric_scale(max_abs: jax.Array) -> jax.Array:
+    """Per-group scale from a (broadcastable) max-|x| statistic."""
+    return jnp.maximum(max_abs, _EPS).astype(jnp.float32) / QMAX
+
+
+def quantize_with_scale(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """int8 codes for `x` under an externally chosen (broadcastable) scale."""
+    return jnp.clip(jnp.round(x / scale), -QMAX, QMAX).astype(jnp.int8)
+
+
+def quantize_symmetric(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8: returns (q int8, scale f32 scalar)."""
+    scale = symmetric_scale(jnp.max(jnp.abs(x)))
+    return quantize_with_scale(x, scale), scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """float32 reconstruction of int8 codes under a (broadcastable) scale."""
+    return q.astype(jnp.float32) * scale

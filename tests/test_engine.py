@@ -358,6 +358,30 @@ def test_adaptive_r0_plan_validation(rng):
         p.with_plan(backend="exact", adaptive_r0=True).search(q, 3)
 
 
+def test_rerank_k_plan_validation(rng):
+    """rerank_k is gated like d_chunk: positive-only at plan construction,
+    quantized-candidate backends only at dispatch (supports_quantized),
+    rerank_k >= k at the search call where k is known, and with_plan
+    backend switches drop the now-illegal knob."""
+    _, _, s = _searcher(rng, n=300)
+    q = jnp.asarray(rng.normal(size=(2, 2)), jnp.float32)
+    for bad in (0, -4):
+        with pytest.raises(ValueError, match="rerank_k"):
+            api.ExecutionPlan(rerank_k=bad)
+    for backend in ("jnp", "pallas", "pallas_gather", "exact"):
+        assert not api.get_backend(backend).supports_quantized
+        with pytest.raises(ValueError, match="rerank_k"):
+            s.with_plan(backend=backend, rerank_k=8).search(q, 3)
+    assert api.get_backend("pallas_q8").supports_quantized
+    # a shortlist shallower than k can never return k exact rows
+    with pytest.raises(ValueError, match="rerank_k"):
+        s.with_plan(backend="pallas_q8", rerank_k=2).search(q, 3)
+    p = s.with_plan(backend="pallas_q8", rerank_k=8)
+    assert p.search(q, 3).ids.shape == (2, 3)
+    assert p.with_plan(backend="pallas").plan.rerank_k is None  # dropped
+    assert p.with_plan(backend="pallas_q8", chunk_size=2).plan.rerank_k == 8
+
+
 @pytest.mark.parametrize("mode", ["refined", "paper"])
 def test_adaptive_r0_parity_across_backends(rng, mode):
     """ISSUE-6 acceptance: with adaptive_r0=True every registered backend

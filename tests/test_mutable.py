@@ -127,6 +127,9 @@ def test_facade_insert_search_parity_all_backends(rng):
     ).insert(pts[n1:], labels=labels[n1:])
     sh_ref = api.ActiveSearcher.build_sharded(
         pts, mesh=mesh, axis="data", labels=labels, cfg=CFG, proj=proj)
+    # the sweep must include the quantized backend: its store is DERIVED
+    # from the snapshot, so insert == rebuild has to survive requantization
+    assert "pallas_q8" in api.registered_backends()
     for name in api.registered_backends():
         impl = api.get_backend(name)
         if impl.search is None:
